@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: fused solver step vs. unfused jnp, flash vs.
+reference attention, chunked SSD vs. sequential scan.
+
+CPU wall-times here validate plumbing only (the TPU picture comes from
+the dry-run roofline); the derived column carries the modeled HBM-pass
+count — the quantity the fusion actually optimizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.solver_step import ops as ss_ops
+from repro.kernels.solver_step import ref as ss_ref
+from repro.kernels.ssd import ref as ssd_ref
+from .common import emit, timed
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+
+    # --- solver step (B=64, D=3072: CIFAR batch) -------------------------
+    B, D = 64, 3072
+    ks = jax.random.split(key, 8)
+    x, xp, s2, z, xv = (jax.random.normal(k, (B, D)) for k in ks[:5])
+    e0, d1, d2 = (jax.random.uniform(k, (B,)) for k in ks[5:])
+    kw = dict(eps_abs=0.0078, eps_rel=0.05)
+
+    fused = jax.jit(lambda *a: ss_ops.error_step(*a, **kw))
+    unfused = jax.jit(lambda *a: ss_ref.error_step(*a, **kw))
+    us_f, _ = timed(fused, x, xp, s2, z, xv, e0, d1, d2, repeats=5)
+    us_u, _ = timed(unfused, x, xp, s2, z, xv, e0, d1, d2, repeats=5)
+    # unfused: ~6 reads + 2 writes of (B,D); fused: 5 reads + 1 write.
+    emit("kernels/solver_step/fused", us_f, "hbm_passes=6")
+    emit("kernels/solver_step/jnp", us_u, "hbm_passes=8")
+
+    # --- flash attention (S=512) -----------------------------------------
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k_ = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    flash = jax.jit(lambda q, k, v: fa_ops.attention(q, k, v, causal=True))
+    refat = jax.jit(lambda q, k, v: fa_ref.attention(q, k, v, causal=True))
+    us_f, _ = timed(flash, q, k_, v, repeats=3)
+    us_r, _ = timed(refat, q, k_, v, repeats=3)
+    emit("kernels/flash_attention/pallas-interpret", us_f,
+         "vmem_tiles=128x128")
+    emit("kernels/flash_attention/jnp-ref", us_r, "materializes_SxS=1")
+
+    # --- SSD (S=2048) ------------------------------------------------------
+    Bm, S, H, P, G, N = 2, 2048, 4, 64, 1, 64
+    ks = jax.random.split(key, 5)
+    xs = jax.random.normal(ks[0], (Bm, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bm, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bmat = jax.random.normal(ks[3], (Bm, S, G, N))
+    C = jax.random.normal(ks[4], (Bm, S, G, N))
+
+    chunked = jax.jit(lambda *a: ssd_ref.ssd_chunked(*a, chunk=128))
+    us_c, _ = timed(chunked, xs, dt, A, Bmat, C, repeats=3)
+
+    def seq(xs, dt, A, Bmat, C):
+        y, _ = ssd_ref.ssd_scan(
+            jnp.transpose(xs, (0, 2, 1, 3)), jnp.transpose(dt, (0, 2, 1)), A,
+            jnp.transpose(Bmat, (0, 2, 1, 3)), jnp.transpose(C, (0, 2, 1, 3)),
+        )
+        return y
+
+    seqj = jax.jit(seq)
+    us_s, _ = timed(seqj, xs, dt, A, Bmat, C, repeats=3)
+    emit("kernels/ssd/chunked", us_c, f"depth=log({S // 128})")
+    emit("kernels/ssd/sequential", us_s, f"depth={S}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Serving micro-benchmark: reduced-arch decode throughput per family.
+
+One representative reduced config per architecture family exercises the
+full serve path (embed → scanned blocks → KV/SSM state → head → argmax).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_serve_step
+from repro.models import init_decode_state, init_model
+from .common import emit, timed
+
+ARCHS = ["olmo-1b", "gemma3-12b", "mamba2-2.7b", "deepseek-moe-16b",
+         "jamba-v0.1-52b", "musicgen-medium"]
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for arch in ARCHS:
+        cfg = get_config(arch).scaled_down()
+        params = init_model(cfg, key)
+        B = 4
+        state = init_decode_state(cfg, B, cache_len=64)
+        shape = (B, 1) if cfg.num_codebooks == 1 else (B, 1, cfg.num_codebooks)
+        tok = jax.random.randint(key, shape, 0, cfg.vocab_size)
+        batch = {"tokens": tok}
+        if cfg.vision_dim:
+            batch["cross_embeds"] = jax.random.normal(
+                key, (B, cfg.num_patches, cfg.vision_dim), jnp.dtype(cfg.dtype)
+            )
+        step = jax.jit(make_serve_step(cfg))
+        us, (nt, state) = timed(step, params, batch, state, repeats=10)
+        emit(f"serving/{arch}-reduced", us,
+             f"tok_per_s={B / (us / 1e6):.0f};batch={B}")
+
+
+if __name__ == "__main__":
+    main()

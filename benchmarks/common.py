@@ -1,0 +1,119 @@
+"""Shared benchmark harness: trained score nets + quality metrics.
+
+The paper scores solvers by FID against CIFAR/LSUN/FFHQ using 50k/5k
+samples through Inception-v3. Offline substitutes (DESIGN.md §6):
+
+  * quality metric — Fréchet distance computed on the *known* mean and
+    covariance of the synthetic data distribution (the same statistic
+    FID computes on Inception features, but with an exact reference);
+    for the 2-D mixture we also report a sliced-Wasserstein distance.
+  * score networks — small DiT/MLP nets trained here (cached across
+    benchmark tables), plus analytic scores where exactness matters.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows, where
+``derived`` packs the table's payload (NFE / quality / etc).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VESDE, VPSDE, dsm_loss
+from repro.data.images import GMM2D
+from repro.models.score_unet import (
+    MLPScoreConfig, init_mlp_score, mlp_score_forward,
+)
+from repro.optim import AdamW, ema_init, ema_params, ema_update
+
+Array = jax.Array
+
+GMM = GMM2D()  # 4-mode mixture, the benchmark data distribution
+
+
+def frechet_gaussian(x: Array, y: Array) -> float:
+    """Fréchet distance between Gaussian fits of two sample sets (the FID
+    formula, on raw features): |μ1−μ2|² + tr(C1 + C2 − 2(C1 C2)^½)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    mu1, mu2 = x.mean(0), y.mean(0)
+    c1 = np.cov(x, rowvar=False) + 1e-8 * np.eye(x.shape[1])
+    c2 = np.cov(y, rowvar=False) + 1e-8 * np.eye(y.shape[1])
+    # matrix sqrt of c1 c2 via eigendecomposition of the symmetrized product
+    s1 = _sqrtm_psd(c1)
+    inner = _sqrtm_psd(s1 @ c2 @ s1)
+    return float(((mu1 - mu2) ** 2).sum() + np.trace(c1 + c2 - 2 * inner))
+
+
+def _sqrtm_psd(a: np.ndarray) -> np.ndarray:
+    w, v = np.linalg.eigh((a + a.T) / 2)
+    w = np.clip(w, 0, None)
+    return (v * np.sqrt(w)) @ v.T
+
+
+def sliced_wasserstein(x: Array, y: Array, n_proj: int = 64, seed: int = 0) -> float:
+    """Sliced W2 between two sample sets (exact in each 1-D projection)."""
+    key = jax.random.PRNGKey(seed)
+    d = x.shape[1]
+    dirs = jax.random.normal(key, (n_proj, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=1, keepdims=True)
+    n = min(x.shape[0], y.shape[0])
+    px = jnp.sort(x[:n] @ dirs.T, axis=0)
+    py = jnp.sort(y[:n] @ dirs.T, axis=0)
+    return float(jnp.sqrt(jnp.mean((px - py) ** 2)))
+
+
+@functools.lru_cache(maxsize=4)
+def trained_mlp_score(process: str, steps: int = 600, seed: int = 0):
+    """Train (and cache) an MLP score net on the 4-mode GMM for VE or VP."""
+    sde = VPSDE() if process == "vp" else VESDE(sigma_max=12.0)
+    cfg = MLPScoreConfig(dim=2, hidden=128, depth=3)
+    key = jax.random.PRNGKey(seed)
+    params = init_mlp_score(cfg, key)
+    opt = AdamW(lr=2e-3, weight_decay=0.0)
+    opt_state = opt.init(params)
+    ema = ema_init(params)
+
+    def apply_fn(p, x, t):
+        _, std = sde.marginal(t)
+        return mlp_score_forward(p, x, t, cfg) / std[:, None]
+
+    @jax.jit
+    def step(params, opt_state, ema, key):
+        key, kd, kl = jax.random.split(key, 3)
+        x0 = GMM.sample(kd, 512)
+        loss, grads = jax.value_and_grad(
+            lambda p: dsm_loss(sde, apply_fn, p, x0, kl)
+        )(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, ema_update(ema, params, 0.995), key, loss
+
+    for _ in range(steps):
+        params, opt_state, ema, key, _ = step(params, opt_state, ema, key)
+    final = ema_params(ema, params)
+
+    def score_fn(x, t):
+        return apply_fn(final, x, t)
+
+    return sde, score_fn
+
+
+def timed(fn: Callable, *args, repeats: int = 1) -> Tuple[float, object]:
+    """us/call of a jitted callable (first call excluded = compile)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return us, out
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Benchmark entry point. One function per paper table + framework
+benches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bench_dimensionality,
+    bench_kernels,
+    bench_serving,
+    table1_solver_grid,
+    table2_highdim,
+    table3_offtheshelf,
+    table45_ablations,
+)
+
+SUITES = {
+    "table1": table1_solver_grid.main,     # paper Table 1 (+IS table analog)
+    "table2": table2_highdim.main,         # paper Table 2
+    "table3": table3_offtheshelf.main,     # paper Table 3 / App. A
+    "table45": table45_ablations.main,     # paper Tables 4-5 / App. B
+    "dimensionality": bench_dimensionality.main,  # beyond-paper
+    "kernels": bench_kernels.main,
+    "serving": bench_serving.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    for name in names:
+        if name not in SUITES:
+            print(f"unknown suite {name}; have {list(SUITES)}", file=sys.stderr)
+            raise SystemExit(2)
+        t0 = time.time()
+        SUITES[name]()
+        print(f"# suite {name} done in {time.time() - t0:.0f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Tables 4–5 analog: ablations of Algorithm 1 on VP and VE.
+
+Rows (paper App. B): no change; δ(x') instead of δ(x', x'_prev); no
+extrapolation; q = ∞; r ∈ {0.5, 0.8, 1.0}; Lamba-variant combinations.
+Reported: NFE + Fréchet quality per (process, variant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import AdaptiveConfig, sample
+from .common import GMM, emit, frechet_gaussian, timed
+
+N = 2048
+
+BASE = AdaptiveConfig(eps_rel=0.05)
+
+VARIANTS = {
+    "no-change": {},
+    "delta-no-prev": dict(prev_tolerance=False),
+    "no-extrapolation": dict(extrapolate=False),
+    "q-inf": dict(error_norm="linf"),
+    "r0.5": dict(r_exponent=0.5),
+    "r0.8": dict(r_exponent=0.8),
+    "r1.0": dict(r_exponent=1.0),
+    "lamba-r0.5": dict(extrapolate=False, r_exponent=0.5,
+                       prev_tolerance=False),
+    "lamba-linf-theta0.8": dict(extrapolate=False, r_exponent=0.5,
+                                error_norm="linf", safety=0.8),
+}
+
+
+def main() -> None:
+    from .common import trained_mlp_score
+
+    for process in ("vp", "ve"):
+        sde, score_fn = trained_mlp_score(process)
+        key = jax.random.PRNGKey(21)
+        data = GMM.sample(jax.random.PRNGKey(17), N)
+        for name, mods in VARIANTS.items():
+            cfg = dataclasses.replace(BASE, **mods)
+            fn = jax.jit(
+                lambda k, c=cfg: sample(sde, score_fn, (N, 2), k,
+                                        method="adaptive", config=c)
+            )
+            us, res = timed(fn, key)
+            fd = frechet_gaussian(res.x, data)
+            emit(
+                f"table45/{process}/{name}", us,
+                f"nfe={float(res.mean_nfe):.0f};frechet={fd:.4f};"
+                f"rej={float(res.rejected.sum()) / max(float((res.accepted + res.rejected).sum()), 1):.3f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

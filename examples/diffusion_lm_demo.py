@@ -1,0 +1,82 @@
+"""Diffusion language modeling with a zoo backbone + the paper's solver.
+
+Trains a reduced qwen-family backbone as a score network over token
+embeddings on a synthetic patterned language, then generates token
+sequences with the adaptive solver vs. EM — the paper's technique
+driving *text* generation through the same model zoo the AR serving
+path uses.
+
+Scope note: at this CPU-demo scale (1-layer backbone, random frozen
+embedding geometry, minutes of training) the sampler produces valid
+tokens but not yet the data's joint structure — embedding-space
+diffusion LMs need orders of magnitude more capacity/steps for that
+(Li et al. 2022 trained ~10⁵ steps). What this demo *does* show, and
+tests/test_diffusion_lm.py verifies: DSM loss convergence, exact
+embedding round-tripping, and the adaptive solver running the reverse
+diffusion over sequences at a fraction of EM's NFE.
+
+  PYTHONPATH=src python examples/diffusion_lm_demo.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import VPSDE
+from repro.models.diffusion_lm import (
+    DiffusionLMConfig, diffusion_lm_loss, generate, init_diffusion_lm,
+)
+from repro.optim import AdamW
+
+
+def main():
+    bb = get_config("qwen1.5-0.5b").scaled_down().replace(vocab_size=32)
+    cfg = DiffusionLMConfig(backbone=bb, embed_dim=32)
+    sde = VPSDE()
+    key = jax.random.PRNGKey(0)
+    params = init_diffusion_lm(cfg, key)
+    opt = AdamW(lr=2e-3, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def data(key, B=16, S=16):
+        # "language": ascending runs starting at a random even token
+        start = jax.random.randint(key, (B, 1), 0, 8) * 2
+        return (start + jnp.arange(S)[None, :]) % 32
+
+    @jax.jit
+    def step(params, opt_state, key):
+        key, kd, kl = jax.random.split(key, 3)
+        loss, grads = jax.value_and_grad(
+            lambda p: diffusion_lm_loss(p, cfg, sde, data(kd), kl))(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, key, loss
+
+    print("training diffusion-LM (reduced qwen backbone) ...")
+    t0 = time.time()
+    for i in range(400):
+        params, opt_state, key, loss = step(params, opt_state, key)
+        if i % 100 == 0:
+            print(f"  step {i:4d}  loss {float(loss):8.3f}")
+    print(f"trained in {time.time() - t0:.0f}s")
+
+    def run_correct(toks):
+        """Fraction of adjacent pairs following the +1 (mod 32) rule."""
+        t = np.asarray(toks)
+        return float(np.mean((t[:, 1:] - t[:, :-1]) % 32 == 1))
+
+    for method, kw in [("adaptive", dict(eps_rel=0.05)),
+                       ("adaptive", dict(eps_rel=0.2)),
+                       ("em", dict(n_steps=200))]:
+        toks, res = generate(params, cfg, sde, batch=32, seq=16, key=key,
+                             method=method, **kw)
+        print(f"{method}{kw}: NFE {float(res.mean_nfe):5.0f}  "
+              f"pattern-consistency {run_correct(toks):.2f} "
+              f"(0.03 = chance; structure needs production-scale training)")
+    print("sample:", np.asarray(toks)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""HLO text parsing: collective operand bytes + cost-analysis summary.
+
+``compiled.cost_analysis()`` has FLOPs and memory traffic but not
+collective volume; we parse the post-SPMD HLO and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Sizes are per-participating-device (the HLO is the
+per-device program after partitioning).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[16,4096,128]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_text(hlo: str) -> Dict:
+    """Sum output bytes of every collective op in (post-SPMD) HLO text."""
+    per_kind: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo):
+        tuple_body, dtype, dims, kind, phase = m.groups()
+        if phase == "-done":
+            continue  # counted at -start
+        if tuple_body is not None:
+            size = sum(
+                _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tuple_body)
+            )
+        else:
+            size = _shape_bytes(dtype, dims)
+        per_kind[kind] += size
+        counts[kind] += 1
+    return {
+        "total_bytes": int(sum(per_kind.values())),
+        "bytes_by_kind": dict(per_kind),
+        "counts": dict(counts),
+    }
+
+
+def summarize_cost(cost) -> Dict:
+    """Normalize compiled.cost_analysis() (dict of floats) to the keys
+    the roofline uses. Values are per-device."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals"):
+        if k in cost:
+            out[k.replace(" ", "_")] = float(cost[k])
+    # keep the per-memory-space byte counts too
+    for k, v in cost.items():
+        if k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out

@@ -1,0 +1,160 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+All numerators are per-device (the dry-run records per-device HLO costs),
+so the formulas divide by per-chip peaks only. Hardware: TPU v5e.
+
+Also derives MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat and
+redundant compute).
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.roofline [--mesh 1pod] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Dict, Optional
+
+from repro.configs import get_config, get_shape
+from repro.configs.shapes import apply_shape_policy
+
+# TPU v5e per-chip peaks
+PEAK_FLOPS = 197e12       # bf16 FLOP/s
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def _param_counts(cfg) -> Dict[str, float]:
+    """(total, active) parameter counts excluding the embedding table
+    (embeddings do lookup, not matmul; the LM head IS a matmul and is
+    counted)."""
+    import jax
+
+    from repro.launch.specs import abstract_params
+
+    shapes = abstract_params(cfg)
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = math.prod(leaf.shape)
+        if name == "embed":
+            continue
+        total += n
+        if cfg.moe and "/mlp/w_" in name and "shared" not in name:
+            # routed experts: only top_k of num_experts active per token
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> Dict:
+    """6·N_active·D for train, 2·N_active·D forward-only shapes."""
+    cfg = apply_shape_policy(get_config(arch), get_shape(shape_name))
+    shape = get_shape(shape_name)
+    counts = _param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: ONE token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return {
+        "model_flops_total": factor * counts["active"] * tokens,
+        "model_flops_per_device": factor * counts["active"] * tokens / devices,
+        "params_total": counts["total"],
+        "params_active": counts["active"],
+    }
+
+
+def analyze_record(rec: dict) -> dict:
+    flops = rec["cost"].get("flops", 0.0)
+    bytes_acc = rec["cost"].get(
+        "bytes_accessed", rec["cost"].get("est_hbm_traffic_bytes", 0.0)
+    )
+    coll = rec["collectives"]["total_bytes"]
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    ratio = mf["model_flops_per_device"] / flops if flops else float("nan")
+    bound_time = max(terms.values())
+    mfu_bound = (
+        mf["model_flops_per_device"] / PEAK_FLOPS / bound_time
+        if bound_time else float("nan")
+    )
+    return {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops_per_device": mf["model_flops_per_device"],
+        "useful_ratio": ratio,
+        "mfu_upper_bound": mfu_bound,
+        "peak_gib": (rec["memory"]["peak_bytes"] or 0) / 2**30,
+    }
+
+
+def load_all(mesh: str = "1pod") -> Dict[str, dict]:
+    from repro.configs import ARCH_IDS
+
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        rec = json.load(open(path))
+        if rec["arch"] not in ARCH_IDS:
+            continue  # extras (e.g. the dit-sampler dry-run) have their own report
+        out[f"{rec['arch']}:{rec['shape']}"] = rec
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="1pod", choices=["1pod", "2pod"])
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args()
+
+    recs = load_all(args.mesh)
+    if not recs:
+        raise SystemExit(f"no dry-run records for mesh {args.mesh}")
+
+    header = ("arch", "shape", "compute_s", "memory_s", "coll_s",
+              "dominant", "useful", "mfu_ub", "peak_GiB")
+    if args.md:
+        print("| " + " | ".join(header) + " |")
+        print("|" + "---|" * len(header))
+    else:
+        print(",".join(header))
+    for key, rec in sorted(recs.items()):
+        a = analyze_record(rec)
+        row = (
+            rec["arch"], rec["shape"],
+            f"{a['t_compute_s']:.3e}", f"{a['t_memory_s']:.3e}",
+            f"{a['t_collective_s']:.3e}", a["dominant"],
+            f"{a['useful_ratio']:.2f}", f"{a['mfu_upper_bound']:.2f}",
+            f"{a['peak_gib']:.1f}",
+        )
+        if args.md:
+            print("| " + " | ".join(row) + " |")
+        else:
+            print(",".join(row))
+
+
+if __name__ == "__main__":
+    main()

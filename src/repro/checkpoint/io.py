@@ -1,0 +1,75 @@
+"""Pytree checkpointing: flatten to path-keyed npz + json metadata.
+
+No orbax offline; this covers the framework need (save/restore params,
+optimizer state, EMA, step) with atomic writes and structure validation
+on restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("ckpt_"):-len(".npz")])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like``; returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    extra = set(data.files) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_k, leaf in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        restored.append(jax.numpy.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_paths[1], restored), step

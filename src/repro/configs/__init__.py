@@ -1,0 +1,63 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned arch."""
+
+from __future__ import annotations
+
+from repro.models.config import ModelConfig
+
+from . import (
+    deepseek_moe_16b,
+    gemma3_12b,
+    granite_moe_3b_a800m,
+    jamba_v0_1_52b,
+    llama3_2_vision_90b,
+    mamba2_2_7b,
+    musicgen_medium,
+    olmo_1b,
+    qwen1_5_0_5b,
+    qwen3_14b,
+)
+from .shapes import (
+    LONG_CONTEXT_SWA_WINDOW,
+    SHAPES,
+    InputShape,
+    apply_shape_policy,
+    get_shape,
+    needs_swa_override,
+)
+
+_REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        olmo_1b,
+        qwen1_5_0_5b,
+        qwen3_14b,
+        jamba_v0_1_52b,
+        llama3_2_vision_90b,
+        granite_moe_3b_a800m,
+        gemma3_12b,
+        mamba2_2_7b,
+        deepseek_moe_16b,
+        musicgen_medium,
+    )
+}
+
+ARCH_IDS = tuple(sorted(_REGISTRY))
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown arch '{name}'; have {list(ARCH_IDS)}") from None
+
+
+__all__ = [
+    "ARCH_IDS",
+    "InputShape",
+    "LONG_CONTEXT_SWA_WINDOW",
+    "SHAPES",
+    "apply_shape_policy",
+    "get_config",
+    "get_shape",
+    "needs_swa_override",
+]

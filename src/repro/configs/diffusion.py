@@ -1,0 +1,32 @@
+"""Score-network configs for the paper's own experiments (VE/VP models).
+
+``cifar_dit`` mirrors the paper's CIFAR-10 32×32 setting at a trainable
+scale; ``highres_dit`` stands in for the LSUN/FFHQ 256×256 setting (used
+by the table-2 benchmark at reduced resolution on CPU, full resolution
+under the dry-run). ``toy_mlp`` is the exactly-solvable 2-D setting used
+for solver validation.
+"""
+
+from repro.models.dit import DiTConfig
+from repro.models.score_unet import MLPScoreConfig, UNetConfig
+
+# Paper Table 1 analog (CIFAR-scale, 32×32×3)
+CIFAR_DIT = DiTConfig(
+    image_size=32, channels=3, patch=4, d_model=256, num_layers=6,
+    num_heads=8, d_ff=1024,
+)
+CIFAR_UNET = UNetConfig(image_size=32, channels=3, base=32, mults=(1, 2, 2))
+
+# Paper Table 2 analog (high-res, 256×256×3) — dry-run / lowering scale
+HIGHRES_DIT = DiTConfig(
+    image_size=256, channels=3, patch=16, d_model=768, num_layers=12,
+    num_heads=12, d_ff=3072,
+)
+
+# ~100M-param DiT for the end-to-end example's full preset
+DIT_100M = DiTConfig(
+    image_size=32, channels=3, patch=2, d_model=768, num_layers=12,
+    num_heads=12, d_ff=3072,
+)
+
+TOY_MLP = MLPScoreConfig(dim=2, hidden=128, depth=3)

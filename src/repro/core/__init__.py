@@ -1,0 +1,35 @@
+"""Core of the reproduction: SDEs + the paper's adaptive solver + baselines.
+
+The paper's primary contribution (Algorithm 1/2 — adaptive-step-size
+extrapolated stochastic Improved Euler) lives in
+``repro.core.solvers.adaptive``; everything else here is the substrate
+it needs (processes, tolerances, losses, sampling driver).
+"""
+
+from repro.core.sde import SDE, VESDE, VPSDE, SubVPSDE, get_sde
+from repro.core.solvers import (
+    AdaptiveConfig,
+    ForwardAdaptiveConfig,
+    SolveResult,
+    adaptive,
+    adaptive_forward,
+    available_solvers,
+    ddim,
+    euler_maruyama,
+    get_solver,
+    predictor_corrector,
+    probability_flow_rk45,
+)
+from repro.core.likelihood import bits_per_dim, log_likelihood
+from repro.core.losses import dsm_loss, make_loss_fn
+from repro.core.sampling import sample, sample_chunked
+
+__all__ = [
+    "SDE", "VESDE", "VPSDE", "SubVPSDE", "get_sde",
+    "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult",
+    "adaptive", "adaptive_forward", "available_solvers", "ddim",
+    "euler_maruyama", "get_solver", "predictor_corrector",
+    "probability_flow_rk45", "dsm_loss", "make_loss_fn",
+    "bits_per_dim", "log_likelihood",
+    "sample", "sample_chunked",
+]

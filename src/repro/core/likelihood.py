@@ -1,0 +1,123 @@
+"""Exact log-likelihood via the probability-flow ODE (Song et al. 2020a
+App. D.2) — the capability that makes score-based models *normalizing
+flows* when solved as ODEs.
+
+d/dt log p(x(t)) = −∇·f̃(x, t) along dx/dt = f̃ = f − ½g²s, so
+
+  log p₀(x₀) = log p_T(x_T) + ∫₀^T ∇·f̃(x(t), t) dt.
+
+The divergence uses either the exact jacobian trace (jacfwd — O(d)
+evaluations, fine for small d and for tests) or the Hutchinson
+estimator (Rademacher probes — O(probes), production path for images).
+Integration reuses the adaptive RK45 machinery (fixed-step RK4 here for
+carry simplicity; the step count is a knob).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sde import SDE
+
+Array = jax.Array
+
+
+def _divergence_exact(fn, x: Array, t: Array) -> Array:
+    """∇·fn per sample via the exact jacobian trace. x (B, d)."""
+
+    def single(xi, ti):
+        jac = jax.jacfwd(lambda v: fn(v[None, :], ti[None])[0])(xi)
+        return jnp.trace(jac)
+
+    return jax.vmap(single)(x, t)
+
+
+def _divergence_hutchinson(fn, x: Array, t: Array, key: Array,
+                           probes: int = 8) -> Array:
+    """Unbiased ∇·fn via Rademacher probes: E[εᵀ (∂fn/∂x) ε]."""
+
+    def one_probe(k):
+        eps = jax.random.rademacher(k, x.shape, x.dtype)
+        _, jvp = jax.jvp(lambda v: fn(v, t), (x,), (eps,))
+        return jnp.sum(jvp * eps, axis=tuple(range(1, x.ndim)))
+
+    keys = jax.random.split(key, probes)
+    return jnp.mean(jax.vmap(one_probe)(keys), axis=0)
+
+
+def log_likelihood(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    x0: Array,
+    *,
+    n_steps: int = 200,
+    method: str = "exact",  # "exact" (small d) | "hutchinson"
+    key: Array | None = None,
+    probes: int = 8,
+) -> Array:
+    """log p₀(x₀) per sample (nats). x0 (B, d...) flattened internally."""
+    B = x0.shape[0]
+    orig_shape = x0.shape
+    d = int(jnp.prod(jnp.asarray(x0.shape[1:])))
+    x0f = x0.reshape(B, d)
+
+    def ode_fn(x: Array, t: Array) -> Array:
+        # batch-size-polymorphic: the exact-divergence path calls this
+        # with single samples (B=1) inside vmap.
+        xs = x.reshape((-1,) + orig_shape[1:])
+        drift = sde.ode_drift(xs, t, score_fn(xs, t))
+        return drift.reshape(x.shape[0], d)
+
+    if method == "exact":
+        div = lambda x, t, k: _divergence_exact(ode_fn, x, t)
+    elif method == "hutchinson":
+        assert key is not None, "hutchinson needs a PRNG key"
+        div = lambda x, t, k: _divergence_hutchinson(ode_fn, x, t, k, probes)
+    else:
+        raise ValueError(method)
+
+    h = (sde.T - sde.t_eps) / n_steps
+    base_key = key if key is not None else jax.random.PRNGKey(0)
+
+    def rk4(x, t, k):
+        tb = jnp.full((B,), t)
+        k1 = ode_fn(x, tb)
+        k2 = ode_fn(x + 0.5 * h * k1, tb + 0.5 * h)
+        k3 = ode_fn(x + 0.5 * h * k2, tb + 0.5 * h)
+        k4 = ode_fn(x + h * k3, tb + h)
+        x_new = x + (h / 6.0) * (k1 + 2 * k2 + 2 * k3 + k4)
+        # divergence accumulated at the midpoint (2nd-order quadrature)
+        dv = div(x + 0.5 * h * k1, tb + 0.5 * h, k)
+        return x_new, dv
+
+    def body(carry, i):
+        x, acc, k = carry
+        k, sub = jax.random.split(k)
+        t = sde.t_eps + i * h
+        x, dv = rk4(x, t, sub)
+        return (x, acc + h * dv, k), None
+
+    (xT, int_div, _), _ = jax.lax.scan(
+        body, (x0f, jnp.zeros((B,)), base_key), jnp.arange(n_steps)
+    )
+
+    # prior log-density at t = T: N(0, prior_std² I)
+    ps = sde.prior_std()
+    logp_T = -0.5 * (
+        jnp.sum((xT / ps) ** 2, axis=1) + d * jnp.log(2 * jnp.pi * ps * ps)
+    )
+    return logp_T + int_div
+
+
+def bits_per_dim(sde: SDE, score_fn, x0: Array, **kw) -> Array:
+    """BPD for 8-bit data living in sde.value_range: the discrete
+    likelihood of a bin of width Δ = (hi−lo)/256 is ≈ p(x)·Δ, so
+    bpd = −(log p + d·log Δ) / (d·log 2)."""
+    d = int(jnp.prod(jnp.asarray(x0.shape[1:])))
+    ll = log_likelihood(sde, score_fn, x0, **kw)
+    lo, hi = sde.value_range
+    delta = (hi - lo) / 256.0
+    return -(ll / d + jnp.log(delta)) / jnp.log(2.0)

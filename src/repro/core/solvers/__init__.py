@@ -1,0 +1,23 @@
+"""Solver suite: the paper's adaptive solver plus every baseline it compares to."""
+
+from .base import SolveResult, available_solvers, get_solver, register_solver
+from .euler_maruyama import euler_maruyama
+from .adaptive import AdaptiveConfig, ForwardAdaptiveConfig, adaptive, adaptive_forward
+from .predictor_corrector import predictor_corrector
+from .probability_flow import probability_flow_rk45
+from .ddim import ddim
+
+__all__ = [
+    "SolveResult",
+    "available_solvers",
+    "get_solver",
+    "register_solver",
+    "euler_maruyama",
+    "AdaptiveConfig",
+    "ForwardAdaptiveConfig",
+    "adaptive",
+    "adaptive_forward",
+    "predictor_corrector",
+    "probability_flow_rk45",
+    "ddim",
+]

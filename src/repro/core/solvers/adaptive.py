@@ -1,0 +1,306 @@
+"""The paper's contribution: dynamic-step-size extrapolated SDE solver.
+
+Algorithm 1 (reverse diffusion, per-sample adaptive step sizes) and
+Algorithm 2 (general forward-time diffusion with the Itô s=±1 trick).
+
+TPU adaptation (DESIGN.md §3): the whole adaptive loop is a device-side
+``jax.lax.while_loop`` whose carry holds per-sample (t, h, x, x'_prev,
+nfe, accept/reject counters). The score network receives a *vector* of
+per-sample times, so samples at different t share one batched forward
+pass; finished samples ride along with masked (frozen) state, exactly
+the "wait for all images to converge" semantics of paper Sec. 3.1.5 but
+without host round-trips.
+
+The post-score elementwise arithmetic of one step (two Euler forms,
+extrapolated average, mixed tolerance, scaled ℓ2 error) is available in
+two numerically identical implementations:
+
+  * pure jnp (default; what XLA fuses on its own), and
+  * the fused Pallas kernel ``repro.kernels.solver_step`` (one HBM pass,
+    in-VMEM error reduction) selected with ``use_fused_kernel=True``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sde import SDE
+from repro.core.tolerance import (
+    mixed_tolerance,
+    next_step_size,
+    scaled_error_l2,
+    scaled_error_linf,
+)
+from .base import SolveResult, register_solver
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Hyper-parameters of Algorithm 1 (defaults = paper defaults)."""
+
+    eps_rel: float = 0.01
+    eps_abs: Optional[float] = None  # None → sde.abs_tolerance (image-calibrated)
+    h_init: float = 0.01
+    safety: float = 0.9  # θ
+    r_exponent: float = 0.9  # r
+    error_norm: str = "l2"  # "l2" (paper) | "linf" (ablation)
+    prev_tolerance: bool = True  # δ(x', x'_prev) (Eq.5) vs δ(x') (Eq.4)
+    extrapolate: bool = True  # accept x'' (paper) vs x' (ablation → EM-like)
+    max_iters: int = 100_000
+    use_fused_kernel: bool = False
+
+
+def _expand(v: Array, x: Array) -> Array:
+    """(B,) → (B, 1, 1, ...) to broadcast against x."""
+    return v.reshape(v.shape + (1,) * (x.ndim - 1))
+
+
+def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
+    """x̃, x'' and the scaled error — reference path (see kernels/solver_step).
+
+    e0 = h·a(t−h); d1 = h·g(t−h)²; d2 = √h·g(t−h); all shape (B,).
+    x̃  = x − e0·x' + d1·score2 + d2·z   (drift evaluated at x', Alg. 1)
+    x'' = ½ (x' + x̃)
+    """
+    x_tilde = x - _expand(e0, x) * x_prime + _expand(d1, x) * score2 + _expand(d2, x) * z
+    x_high = 0.5 * (x_prime + x_tilde)
+    delta = mixed_tolerance(
+        x_prime, x_prev if cfg.prev_tolerance else None, eps_abs, cfg.eps_rel
+    )
+    if cfg.error_norm == "l2":
+        err = scaled_error_l2(x_prime, x_high, delta)
+    elif cfg.error_norm == "linf":
+        err = scaled_error_linf(x_prime, x_high, delta)
+    else:
+        raise ValueError(f"unknown error_norm {cfg.error_norm!r}")
+    return x_high, err
+
+
+def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
+    from repro.kernels.solver_step import ops as fused
+
+    if cfg.error_norm != "l2":
+        raise ValueError("fused kernel implements the paper's ℓ2 norm only")
+    return fused.error_step(
+        x, x_prime, score2, z, x_prev, e0, d1, d2,
+        eps_abs=eps_abs,
+        eps_rel=cfg.eps_rel,
+        use_prev=cfg.prev_tolerance,
+    )
+
+
+@register_solver("adaptive")
+def adaptive(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    x_init: Array,
+    key: Array,
+    *,
+    config: AdaptiveConfig | None = None,
+    denoise: bool = True,
+    **overrides,
+) -> SolveResult:
+    """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively."""
+    cfg = config or AdaptiveConfig(**overrides)
+    if overrides and config is not None:
+        cfg = dataclasses.replace(config, **overrides)
+    eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
+
+    batch = x_init.shape[0]
+    t0 = jnp.full((batch,), sde.T, jnp.float32)
+    h0 = jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
+
+    step_math = _step_math_fused if cfg.use_fused_kernel else _step_math_jnp
+
+    def em_coeffs(t, h):
+        """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars)."""
+        a = sde.drift_coeff(t)
+        g = sde.diffusion(t)
+        return 1.0 - h * a, h * g * g, jnp.sqrt(h) * g
+
+    State = tuple  # (x, x_prev, t, h, key, nfe, acc, rej, iters)
+
+    def cond(s: State):
+        _, _, t, _, _, _, _, _, iters = s
+        return jnp.logical_and(
+            jnp.any(t > sde.t_eps + 1e-12), iters < cfg.max_iters
+        )
+
+    def body(s: State):
+        x, x_prev, t, h, key, nfe, acc, rej, iters = s
+        active = t > sde.t_eps + 1e-12
+        # Clamp the times fed to the score net for frozen samples.
+        t_c = jnp.clip(t, sde.t_eps, sde.T)
+        h_c = jnp.where(active, h, 0.0)
+        t2 = jnp.clip(t_c - h_c, sde.t_eps, sde.T)
+
+        key, sub = jax.random.split(key)
+        z = jax.random.normal(sub, x.shape, x.dtype)
+
+        # --- low-order proposal: one reverse-EM step --------------------
+        score1 = score_fn(x, t_c)
+        c0, c1, c2 = em_coeffs(t_c, h_c)
+        x_prime = _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
+
+        # --- high-order proposal: stochastic Improved Euler -------------
+        score2 = score_fn(x_prime, t2)
+        e0 = h_c * sde.drift_coeff(t2)
+        g2 = sde.diffusion(t2)
+        d1 = h_c * g2 * g2
+        d2 = jnp.sqrt(h_c) * g2
+        x_high, err = step_math(
+            x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs
+        )
+        proposal = x_high if cfg.extrapolate else x_prime
+
+        accept = jnp.logical_and(err <= 1.0, active)
+        acc_e = _expand(accept, x)
+        x_new = jnp.where(acc_e, proposal, x)
+        x_prev_new = jnp.where(acc_e, x_prime, x_prev)
+        t_new = jnp.where(accept, t - h, t)
+
+        remaining = jnp.maximum(t_new - sde.t_eps, 0.0)
+        h_new = next_step_size(
+            h, err, remaining, safety=cfg.safety, r_exponent=cfg.r_exponent
+        )
+        h_new = jnp.where(active, h_new, h)
+
+        two = jnp.where(active, 2, 0).astype(jnp.int32)
+        return (
+            x_new,
+            x_prev_new,
+            t_new,
+            h_new,
+            key,
+            nfe + two,
+            acc + accept.astype(jnp.int32),
+            rej + jnp.logical_and(~accept, active).astype(jnp.int32),
+            iters + 1,
+        )
+
+    zeros = jnp.zeros((batch,), jnp.int32)
+    init: State = (
+        x_init, x_init, t0, h0, key, zeros, zeros, zeros, jnp.asarray(0, jnp.int32)
+    )
+    x, _, _, _, key, nfe, acc, rej, iters = jax.lax.while_loop(cond, body, init)
+
+    if denoise:
+        t = jnp.full((batch,), sde.t_eps)
+        x = sde.tweedie_denoise(x, score_fn(x, t))
+        nfe = nfe + 1
+    return SolveResult(x=x, nfe=nfe, iterations=iters, accepted=acc, rejected=rej)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: arbitrary forward-time diffusion dx = f(x,t)dt + g(x,t)dw
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardAdaptiveConfig:
+    eps_rel: float = 0.01
+    eps_abs: float = 1e-3
+    h_init: float = 0.01
+    safety: float = 0.9
+    r_exponent: float = 0.9
+    max_iters: int = 100_000
+    stratonovich: bool = False  # True (or state-indep g) → s = 0
+
+
+def adaptive_forward(
+    drift_fn: Callable[[Array, Array], Array],
+    diffusion_fn: Callable[[Array, Array], Array],
+    x0: Array,
+    t_begin: float,
+    t_end: float,
+    key: Array,
+    *,
+    config: ForwardAdaptiveConfig | None = None,
+) -> SolveResult:
+    """Algorithm 2 (paper App. C): forward-time general diffusion solver.
+
+    Differences from Algorithm 1 (per the paper): forward time; g may
+    depend on x, handled with the Itô correction s ~ U{-1,+1} of Roberts
+    (2012); the Gaussian draw z is *retained across rejections* so the
+    rejection does not bias the driving noise.
+    """
+    cfg = config or ForwardAdaptiveConfig()
+    batch = x0.shape[0]
+    span = t_end - t_begin
+    t0 = jnp.full((batch,), float(t_begin), jnp.float32)
+    h0 = jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), span)
+
+    def cond(s):
+        _, _, t, _, _, _, _, _, _, _, iters = s
+        return jnp.logical_and(jnp.any(t < t_end - 1e-12), iters < cfg.max_iters)
+
+    def body(s):
+        x, x_prev, t, h, z, ssign, key, nfe, acc, rej, iters = s
+        active = t < t_end - 1e-12
+        h_c = jnp.where(active, jnp.minimum(h, t_end - t), 0.0)
+
+        g1 = diffusion_fn(x, t)
+        f1 = drift_fn(x, t)
+        sq = jnp.sqrt(h_c)
+        se = _expand(ssign, x)
+        x_prime = (
+            x + _expand(h_c, x) * f1 + _expand(sq, x) * g1 * (z - se)
+        )
+        t2 = t + h_c
+        g2 = diffusion_fn(x_prime, t2)
+        f2 = drift_fn(x_prime, t2)
+        x_tilde = x + _expand(h_c, x) * f2 + _expand(sq, x) * g2 * (z + se)
+        x_high = 0.5 * (x_prime + x_tilde)
+
+        delta = mixed_tolerance(x_prime, x_prev, cfg.eps_abs, cfg.eps_rel)
+        err = scaled_error_l2(x_prime, x_high, delta)
+
+        accept = jnp.logical_and(err <= 1.0, active)
+        acc_e = _expand(accept, x)
+        x_new = jnp.where(acc_e, x_high, x)
+        x_prev_new = jnp.where(acc_e, x_prime, x_prev)
+        t_new = jnp.where(accept, t + h_c, t)
+
+        # Redraw the noise only after acceptance (rejection keeps z).
+        key, kz, ks = jax.random.split(key, 3)
+        z_fresh = jax.random.normal(kz, x.shape, x.dtype)
+        s_fresh = (
+            jnp.zeros((batch,), x.dtype)
+            if cfg.stratonovich
+            else jax.random.rademacher(ks, (batch,), x.dtype)
+        )
+        z_new = jnp.where(acc_e, z_fresh, z)
+        s_new = jnp.where(accept, s_fresh, ssign)
+
+        remaining = jnp.maximum(t_end - t_new, 0.0)
+        h_new = next_step_size(
+            h, err, remaining, safety=cfg.safety, r_exponent=cfg.r_exponent
+        )
+        h_new = jnp.where(active, h_new, h)
+        two = jnp.where(active, 2, 0).astype(jnp.int32)
+        return (
+            x_new, x_prev_new, t_new, h_new, z_new, s_new, key,
+            nfe + two,
+            acc + accept.astype(jnp.int32),
+            rej + jnp.logical_and(~accept, active).astype(jnp.int32),
+            iters + 1,
+        )
+
+    key, kz, ks = jax.random.split(key, 3)
+    z0 = jax.random.normal(kz, x0.shape, x0.dtype)
+    s0 = (
+        jnp.zeros((batch,), x0.dtype)
+        if cfg.stratonovich
+        else jax.random.rademacher(ks, (batch,), x0.dtype)
+    )
+    zeros = jnp.zeros((batch,), jnp.int32)
+    init = (x0, x0, t0, h0, z0, s0, key, zeros, zeros, zeros, jnp.asarray(0, jnp.int32))
+    out = jax.lax.while_loop(cond, body, init)
+    x, _, _, _, _, _, _, nfe, acc, rej, iters = out
+    return SolveResult(x=x, nfe=nfe, iterations=iters, accepted=acc, rejected=rej)

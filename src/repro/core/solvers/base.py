@@ -1,0 +1,74 @@
+"""Common solver API.
+
+Every solver consumes an ``SDE``, a score function ``s(x, t)`` (with t a
+per-sample vector), an initial state drawn from the prior, and returns a
+``SolveResult``. Solvers integrate the *reverse* diffusion from t=T down
+to t=sde.t_eps and (optionally) apply the corrected Tweedie denoising
+step of paper Appendix D.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SolveResult:
+    """Output of a solver run.
+
+    Attributes:
+      x: final samples, shape (B, ...).
+      nfe: per-sample number of score-function evaluations, shape (B,).
+           For fixed-step solvers this is constant across the batch.
+      iterations: number of solver loop iterations actually executed
+           (scalar). Wall-clock cost on accelerators is proportional to
+           iterations, not per-sample NFE, because finished samples ride
+           along masked.
+      accepted / rejected: per-sample accept/reject counts (adaptive
+           solvers only; zeros otherwise), shape (B,).
+    """
+
+    x: Array
+    nfe: Array
+    iterations: Array
+    accepted: Array
+    rejected: Array
+
+    @property
+    def mean_nfe(self) -> Array:
+        return jnp.mean(self.nfe)
+
+    @property
+    def max_nfe(self) -> Array:
+        return jnp.max(self.nfe)
+
+
+_REGISTRY: Dict[str, Callable[..., Any]] = {}
+
+
+def register_solver(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_solver(name: str) -> Callable[..., Any]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver '{name}'; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_solvers():
+    return sorted(_REGISTRY)

@@ -1,0 +1,68 @@
+"""DDIM (Song et al. 2020b) — deterministic VP-only fast sampler baseline.
+
+Defined only for VP diffusions (as in the paper, Sec. 4 "which is only
+defined for VP models"). Uses the continuous-time VP marginals:
+ᾱ(t) = exp(−∫β) so that x_t = sqrt(ᾱ) x₀ + sqrt(1−ᾱ) ε, and the
+score relates to the noise prediction by ε̂ = −sqrt(1−ᾱ) · s(x, t).
+
+η = 0 (deterministic) update:
+  x_{t'} = sqrt(ᾱ') x̂₀ + sqrt(1−ᾱ') ε̂,   x̂₀ = (x − sqrt(1−ᾱ) ε̂)/sqrt(ᾱ)
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sde import VPSDE
+from .base import SolveResult, register_solver
+
+Array = jax.Array
+
+
+@register_solver("ddim")
+def ddim(
+    sde: VPSDE,
+    score_fn: Callable[[Array, Array], Array],
+    x_init: Array,
+    key: Array,  # unused, deterministic
+    *,
+    n_steps: int = 100,
+    eta: float = 0.0,
+    denoise: bool = True,
+) -> SolveResult:
+    if not isinstance(sde, VPSDE):
+        raise TypeError("DDIM is defined only for VP diffusions (paper Sec. 4)")
+    del key
+    batch = x_init.shape[0]
+    ts = jnp.linspace(sde.T, sde.t_eps, n_steps + 1)
+
+    def alpha_bar(t):
+        m, _ = sde.marginal(t)
+        return m * m
+
+    def body(carry, i):
+        x = carry
+        t = jnp.full((batch,), ts[i])
+        t_next = jnp.full((batch,), ts[i + 1])
+        ab = alpha_bar(t).reshape((-1,) + (1,) * (x.ndim - 1))
+        ab_n = alpha_bar(t_next).reshape((-1,) + (1,) * (x.ndim - 1))
+        score = score_fn(x, t)
+        eps_hat = -jnp.sqrt(1.0 - ab) * score
+        x0_hat = (x - jnp.sqrt(1.0 - ab) * eps_hat) / jnp.sqrt(ab)
+        x = jnp.sqrt(ab_n) * x0_hat + jnp.sqrt(jnp.maximum(1.0 - ab_n, 0.0)) * eps_hat
+        return x, None
+
+    x, _ = jax.lax.scan(body, x_init, jnp.arange(n_steps))
+    nfe = jnp.full((batch,), n_steps, jnp.int32)
+    if denoise:
+        t = jnp.full((batch,), sde.t_eps)
+        x = sde.tweedie_denoise(x, score_fn(x, t))
+        nfe = nfe + 1
+    zeros = jnp.zeros((batch,), jnp.int32)
+    return SolveResult(
+        x=x, nfe=nfe, iterations=jnp.asarray(n_steps, jnp.int32),
+        accepted=zeros, rejected=zeros,
+    )

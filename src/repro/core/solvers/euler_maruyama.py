@@ -1,0 +1,61 @@
+"""Fixed-step Euler–Maruyama for the reverse diffusion (the baseline).
+
+Follows the conventions of Song et al. 2020a as described in paper
+Appendix D: time follows t_0 = T, t_i = t_{i-1} - (T - t_eps)/N, the
+solver stops at t = t_eps, and the sample is then denoised with the
+corrected Tweedie formula.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sde import SDE
+from .base import SolveResult, register_solver
+
+Array = jax.Array
+
+
+@register_solver("em")
+def euler_maruyama(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    x_init: Array,
+    key: Array,
+    *,
+    n_steps: int = 1000,
+    denoise: bool = True,
+) -> SolveResult:
+    batch = x_init.shape[0]
+    h = (sde.T - sde.t_eps) / n_steps
+
+    def body(carry, i):
+        x, key = carry
+        key, sub = jax.random.split(key)
+        t = jnp.full((batch,), sde.T - i * h)
+        z = jax.random.normal(sub, x.shape, x.dtype)
+        score = score_fn(x, t)
+        drift = sde.reverse_drift(x, t, score)
+        g = sde.diffusion(t).reshape((-1,) + (1,) * (x.ndim - 1))
+        # reverse-time step: dt = -h; noise enters with sqrt(h).
+        x = x - h * drift + jnp.sqrt(h) * g * z
+        return (x, key), None
+
+    (x, key), _ = jax.lax.scan(body, (x_init, key), jnp.arange(n_steps))
+
+    nfe = jnp.full((batch,), n_steps, jnp.int32)
+    if denoise:
+        t = jnp.full((batch,), sde.t_eps)
+        x = sde.tweedie_denoise(x, score_fn(x, t))
+        nfe = nfe + 1
+    zeros = jnp.zeros((batch,), jnp.int32)
+    return SolveResult(
+        x=x,
+        nfe=nfe,
+        iterations=jnp.asarray(n_steps, jnp.int32),
+        accepted=zeros,
+        rejected=zeros,
+    )

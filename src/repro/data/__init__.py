@@ -1,0 +1,14 @@
+from .images import GMM2D, GMMImageConfig, data_moments, sample_images
+from .tokens import (
+    TokenPipelineConfig,
+    apply_delay_pattern,
+    batches,
+    lm_loss,
+    synth_batch,
+)
+
+__all__ = [
+    "GMM2D", "GMMImageConfig", "data_moments", "sample_images",
+    "TokenPipelineConfig", "apply_delay_pattern", "batches", "lm_loss",
+    "synth_batch",
+]

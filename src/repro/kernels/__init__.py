@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §2).
+
+Each kernel subpackage ships: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper, CPU-interpret fallback), ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""

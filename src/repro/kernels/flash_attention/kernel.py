@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention (forward), causal + sliding-window, GQA.
+
+Online-softmax tiling: grid = (B, Hq, Sq/bq, Sk/bk). The trailing grid
+axis (key blocks) executes sequentially on TPU, so the running max `m`,
+normalizer `l`, and output accumulator live in VMEM scratch revisited
+across key blocks. Out-of-band blocks (fully masked by causality or the
+sliding window) are skipped with ``pl.when`` — with a window W the skip
+turns O(S²) work into O(S·W), which is what lets the dense architectures
+run the long_500k shape (DESIGN.md §4).
+
+Block sizes default to the MXU-native (128, 128); D rides whole (the
+head dim is ≤ 256 for every assigned architecture).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int | None,
+    block_q: int, block_k: int, seq_len: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[:, :] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[:, :] = jnp.zeros_like(l_scr)
+        acc_scr[:, :] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Block-level visibility: causal ⇒ need k_start <= q_end;
+    # window  ⇒ need k_end > q_start - window.
+    visible = jnp.asarray(True)
+    if causal:
+        visible = jnp.logical_and(visible, k_start <= q_start + block_q - 1)
+    if window is not None:
+        visible = jnp.logical_and(visible, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0, :, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0, :, :].astype(jnp.float32)  # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[:, :]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_new = corr * l_scr[:, :] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[:, :] = corr * acc_scr[:, :] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[:, :] = m_new
+        l_scr[:, :] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[:, :]
+        # Rows with no visible keys (can't happen under causal; guard anyway).
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[:, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "block_q", "block_k", "true_len", "interpret"
+    ),
+)
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    true_len: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq = pl.cdiv(S, bq)
+    nk = pl.cdiv(S, bk)
+
+    q_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // group, j, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0))
+
+    return pl.pallas_call(
+        functools.partial(
+            _fa_kernel,
+            scale=float(scale), causal=causal, window=window,
+            block_q=bq, block_k=bk, seq_len=true_len if true_len is not None else S,
+        ),
+        grid=(B, Hq, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,54 @@
+"""Public wrapper for the flash-attention kernel.
+
+Pads S up to the q/k block size (padded keys are masked off inside the
+kernel via ``kpos < seq_len``… note the kernel masks with the *padded*
+length, so we mask padded keys here by padding k with -inf-safe zeros
+and relying on the causal mask: padded queries only attend to padded
+keys and are sliced away; padded keys sit at positions ≥ true S and are
+invisible to true queries under causality). For the non-causal case we
+explicitly pass the true sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = _k.DEFAULT_BLOCK_Q,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+    interpret: bool | None = None,
+) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    B, Hq, S, D = q.shape
+    bq = min(block_q, max(S, 8))
+    pad = (-S) % bq
+    if pad:
+        padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    out = _k.flash_attention(
+        q, k, v,
+        causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=min(block_k, q.shape[2]),
+        true_len=S,
+        interpret=interpret,
+    )
+    return out[:, :, :S, :]

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused adaptive-solver step (paper Algorithm 1 body).
+
+Why a kernel: one adaptive step performs ~10 elementwise passes over
+(B, D) fp32 state (second Euler form, extrapolated average, tolerance,
+scaled residual, square, reduce). Left to XLA these fuse only partially
+(the reduction splits the fusion), so the state streams HBM→VMEM several
+times. At image scale (B=128, D=196k for 256²×3) the step is purely
+HBM-bandwidth-bound; fusing everything into a single pass with an
+in-VMEM error accumulation is the TPU-native adaptation of the paper's
+"only two score evaluations" economy (DESIGN.md §3).
+
+Tiling: grid = (B/bb, D/bd); each program handles a (bb, bd) tile held
+in VMEM. The per-sample squared-residual sum accumulates into a (bb,)
+output tile revisited across the D-grid dimension (TPU grids execute
+the trailing axis sequentially, so accumulation is race-free).
+
+Per-sample coefficients (c's/d's, shape (B,)) ride in SMEM-friendly
+(bb, 1) blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# (sublane, lane)-aligned default tile.
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_D = 512
+
+
+def _em_kernel(x_ref, s_ref, z_ref, c0_ref, c1_ref, c2_ref, out_ref):
+    c0 = c0_ref[:, :]  # (bb, 1) broadcasts over lanes
+    c1 = c1_ref[:, :]
+    c2 = c2_ref[:, :]
+    out_ref[:, :] = c0 * x_ref[:, :] + c1 * s_ref[:, :] + c2 * z_ref[:, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d", "interpret"))
+def em_step(
+    x: Array,
+    score: Array,
+    z: Array,
+    c0: Array,
+    c1: Array,
+    c2: Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+) -> Array:
+    """x' = c0·x + c1·score + c2·z, one fused HBM pass."""
+    B, D = x.shape
+    bb, bd = min(block_b, B), min(block_d, D)
+    grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
+    coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+    state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _em_kernel,
+        grid=grid,
+        in_specs=[state_spec, state_spec, state_spec,
+                  coeff_spec, coeff_spec, coeff_spec],
+        out_specs=state_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), x.dtype),
+        interpret=interpret,
+    )(x, score, z, c0[:, None], c1[:, None], c2[:, None])
+
+
+def _error_kernel(
+    x_ref, xp_ref, s2_ref, z_ref, xprev_ref,
+    e0_ref, d1_ref, d2_ref,
+    xh_ref, acc_ref,
+    *, eps_abs: float, eps_rel: float, use_prev: bool,
+):
+    j = pl.program_id(1)
+
+    x = x_ref[:, :]
+    xp = xp_ref[:, :]
+    x_tilde = (
+        x - e0_ref[:, :] * xp + d1_ref[:, :] * s2_ref[:, :] + d2_ref[:, :] * z_ref[:, :]
+    )
+    x_high = 0.5 * (xp + x_tilde)
+    xh_ref[:, :] = x_high
+
+    mag = jnp.abs(xp)
+    if use_prev:
+        mag = jnp.maximum(mag, jnp.abs(xprev_ref[:, :]))
+    delta = jnp.maximum(eps_abs, eps_rel * mag)
+    r = (xp - x_high) / delta
+    partial = jnp.sum(r * r, axis=1, keepdims=True)  # (bb, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[:, :] = jnp.zeros_like(acc_ref)
+
+    acc_ref[:, :] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps_abs", "eps_rel", "use_prev", "block_b", "block_d", "interpret"),
+)
+def error_step(
+    x: Array,
+    x_prime: Array,
+    score2: Array,
+    z: Array,
+    x_prev: Array,
+    e0: Array,
+    d1: Array,
+    d2: Array,
+    *,
+    eps_abs: float,
+    eps_rel: float,
+    use_prev: bool = True,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """Fused x̃/x''/δ/residual-reduction. Returns (x'' (B,D), e2 (B,))."""
+    B, D = x.shape
+    bb, bd = min(block_b, B), min(block_d, D)
+    grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
+    state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
+    coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+    acc_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+
+    x_high, acc = pl.pallas_call(
+        functools.partial(
+            _error_kernel, eps_abs=eps_abs, eps_rel=eps_rel, use_prev=use_prev
+        ),
+        grid=grid,
+        in_specs=[state_spec] * 5 + [coeff_spec] * 3,
+        out_specs=(state_spec, acc_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, D), x.dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, x_prime, score2, z, x_prev, e0[:, None], d1[:, None], d2[:, None])
+    e2 = jnp.sqrt(acc[:, 0] / D)
+    return x_high, e2

@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the fused solver-step kernel.
+
+Handles arbitrary trailing shapes (images (B, H, W, C), tokens (B, S, E))
+by flattening to (B, D), padding D up to the lane width, and dispatching
+to the Pallas kernel (interpret=True on CPU so the same code path is
+exercised everywhere). Padding is with zeros, which contribute exactly 0
+to the error sum (δ ≥ ε_abs > 0), and the e2 normalization uses the true
+unpadded D.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+Array = jax.Array
+
+_LANES = 128
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _flatten_pad(x: Array):
+    B = x.shape[0]
+    flat = x.reshape(B, -1)
+    D = flat.shape[1]
+    pad = (-D) % _LANES
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, D
+
+
+def em_step(x, score, z, c0, c1, c2, *, interpret: bool | None = None) -> Array:
+    """Fused x' = c0·x + c1·score + c2·z for arbitrary state shapes."""
+    interpret = _on_cpu() if interpret is None else interpret
+    orig_shape = x.shape
+    xf, D = _flatten_pad(x)
+    sf, _ = _flatten_pad(score)
+    zf, _ = _flatten_pad(z)
+    out = _k.em_step(xf, sf, zf, c0, c1, c2, interpret=interpret)
+    return out[:, :D].reshape(orig_shape)
+
+
+def error_step(
+    x, x_prime, score2, z, x_prev, e0, d1, d2,
+    *,
+    eps_abs: float,
+    eps_rel: float,
+    use_prev: bool = True,
+    interpret: bool | None = None,
+):
+    """Fused x̃/x''/δ/error. Returns (x'' with x's shape, e2 (B,))."""
+    interpret = _on_cpu() if interpret is None else interpret
+    orig_shape = x.shape
+    xf, D = _flatten_pad(x)
+    xpf, _ = _flatten_pad(x_prime)
+    s2f, _ = _flatten_pad(score2)
+    zf, _ = _flatten_pad(z)
+    xvf, _ = _flatten_pad(x_prev)
+    x_high, acc_e2 = _k.error_step(
+        xf, xpf, s2f, zf, xvf, e0, d1, d2,
+        eps_abs=float(eps_abs), eps_rel=float(eps_rel), use_prev=use_prev,
+        interpret=interpret,
+    )
+    # kernel normalized by padded D; rescale to the true dimension count.
+    Dpad = xf.shape[1]
+    e2 = acc_e2 * jnp.sqrt(Dpad / D)
+    return x_high[:, :D].reshape(orig_shape), e2

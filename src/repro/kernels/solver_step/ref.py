@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused adaptive-solver step kernel.
+
+Shapes: state tensors are (B, D) fp32; per-sample coefficients are (B,).
+
+``em_step``   : x' = c0·x + c1·score + c2·z
+``error_step``: x̃  = x − e0·x' + d1·score2 + d2·z
+                x'' = ½ (x' + x̃)
+                δ   = max(ε_abs, ε_rel · max(|x'|, |x'_prev|))   [or |x'| only]
+                e2  = sqrt(mean(((x' − x'')/δ)²))               per sample
+returns (x'', e2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def em_step(x: Array, score: Array, z: Array, c0: Array, c1: Array, c2: Array) -> Array:
+    return c0[:, None] * x + c1[:, None] * score + c2[:, None] * z
+
+
+def error_step(
+    x: Array,
+    x_prime: Array,
+    score2: Array,
+    z: Array,
+    x_prev: Array,
+    e0: Array,
+    d1: Array,
+    d2: Array,
+    *,
+    eps_abs: float,
+    eps_rel: float,
+    use_prev: bool = True,
+):
+    x_tilde = x - e0[:, None] * x_prime + d1[:, None] * score2 + d2[:, None] * z
+    x_high = 0.5 * (x_prime + x_tilde)
+    mag = jnp.abs(x_prime)
+    if use_prev:
+        mag = jnp.maximum(mag, jnp.abs(x_prev))
+    delta = jnp.maximum(eps_abs, eps_rel * mag)
+    r = (x_prime - x_high) / delta
+    e2 = jnp.sqrt(jnp.mean(r * r, axis=1))
+    return x_high, e2

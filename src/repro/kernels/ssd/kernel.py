@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: chunked SSD (state-space duality) scan for Mamba2.
+
+The SSD insight (Dao & Gu 2024, arXiv:2405.21060) is that the selective
+state-space recurrence factors into chunk-local *matrix multiplies*
+(MXU-friendly) plus a tiny cross-chunk recurrence of the (N, P) state:
+
+  within chunk:  Y_intra = (M ⊙ (C Bᵀ)) (dt·X)      M[t,s] = e^{L_t−L_s}, s ≤ t
+  from carry  :  Y_inter = e^{L_t} · (C · state)
+  state update:  state'  = e^{L_Q} state + Bᵀ diag(e^{L_Q−L_s} dt_s) X
+
+where L is the within-chunk cumsum of dt·A (A < 0, so every exponent is
+≤ 0 — no overflow). This is the TPU-native adaptation: the original CUDA
+kernel leans on warp shuffles for the scan; here the chunk-local work is
+three (Q×N)/(Q×Q) matmuls on the MXU and the carried state lives in VMEM
+scratch across the sequential chunk grid axis.
+
+Grid: (B, H, S/Q). Layout: x (B,H,S,P), dt (B,H,S), A (H,1),
+Bm/C (B,G,S,N). All compute fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[:, :] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, :, :].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, 0, :].astype(jnp.float32)       # (Q,)
+    A = a_ref[0, 0]                                 # scalar
+    Bm = b_ref[0, 0, :, :].astype(jnp.float32)     # (Q, N)
+    C = c_ref[0, 0, :, :].astype(jnp.float32)      # (Q, N)
+
+    l = dt * A                                      # (Q,) all ≤ 0
+    Lc = jnp.cumsum(l)                              # (Q,) decreasing
+    Ltot = Lc[-1]
+
+    # Intra-chunk: (M ⊙ C Bᵀ) (dt·x)
+    scores = jax.lax.dot_general(
+        C, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (Q, Q) = C_t · B_s
+    seg = Lc[:, None] - Lc[None, :]                 # L_t − L_s
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(spos <= tpos, jnp.exp(seg), 0.0)
+    dx = dt[:, None] * x                            # (Q, P)
+    y = jax.lax.dot_general(
+        scores * M, dx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # Inter-chunk: e^{L_t} C_t · state_prev
+    state = state_scr[:, :]                         # (N, P)
+    y += jnp.exp(Lc)[:, None] * jax.lax.dot_general(
+        C, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # State update: e^{L_Q} state + Bᵀ diag(e^{L_Q−L_s} dt) x
+    w = jnp.exp(Ltot - Lc) * dt                     # (Q,)
+    state_scr[:, :] = jnp.exp(Ltot) * state + jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: Array,
+    dt: Array,
+    A: Array,
+    Bm: Array,
+    C: Array,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> Array:
+    """Chunked SSD scan. S must be a multiple of ``chunk`` (ops.py pads)."""
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    assert H % G == 0 and S % chunk == 0, (H, G, S, chunk)
+    group = H // G
+    nc = S // chunk
+
+    x_spec = pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0))
+    dt_spec = pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c))
+    a_spec = pl.BlockSpec((1, 1), lambda b, h, c: (h, 0))
+    bc_spec = pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h // group, c, 0))
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(B, H, nc),
+        in_specs=[x_spec, dt_spec, a_spec, bc_spec, bc_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.reshape(-1, 1), Bm, C)

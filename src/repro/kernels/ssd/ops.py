@@ -1,0 +1,49 @@
+"""Public wrapper for the SSD scan kernel.
+
+Model-native layout is (B, S, H, P) / (B, S, G, N); the kernel wants the
+head axis ahead of sequence. Pads S up to the chunk size with dt = 0
+(decay e⁰ = 1, injection dt·B⊗x = 0 ⇒ padded steps are identity on the
+state and their outputs are sliced away).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def ssd_scan(
+    x: Array,        # (B, S, H, P)
+    dt: Array,       # (B, S, H)
+    A: Array,        # (H,)
+    Bm: Array,       # (B, S, G, N)
+    C: Array,        # (B, S, G, N)
+    *,
+    chunk: int = _k.DEFAULT_CHUNK,
+    interpret: bool | None = None,
+) -> Array:
+    interpret = _on_cpu() if interpret is None else interpret
+    B, S, H, P = x.shape
+    chunk = min(chunk, max(8, S))
+    pad = (-S) % chunk
+
+    xt = jnp.transpose(x, (0, 2, 1, 3))      # (B,H,S,P)
+    dtt = jnp.transpose(dt, (0, 2, 1))       # (B,H,S)
+    bt = jnp.transpose(Bm, (0, 2, 1, 3))     # (B,G,S,N)
+    ct = jnp.transpose(C, (0, 2, 1, 3))
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))
+        bt = jnp.pad(bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ct = jnp.pad(ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    y = _k.ssd_scan(xt, dtt, A, bt, ct, chunk=chunk, interpret=interpret)
+    y = y[:, :, :S, :]
+    return jnp.transpose(y, (0, 2, 1, 3))    # (B,S,H,P)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: exact sequential recurrence.
+
+Layout (kernel-native): x (B,H,S,P), dt (B,H,S), A (H,), Bm (B,G,S,N),
+C (B,G,S,N), H % G == 0. Per head h with group g = h // (H//G):
+
+  a_t     = exp(dt_t · A_h)
+  state_t = a_t · state_{t-1} + dt_t · B_t ⊗ x_t        (N, P)
+  y_t     = C_tᵀ state_t                                 (P,)
+
+Returns (y (B,H,S,P), final_state (B,H,N,P)). The D-skip connection and
+gating are applied by the model layer, not the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_scan(x: Array, dt: Array, A: Array, Bm: Array, C: Array):
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    group = H // G
+    Bh = jnp.repeat(Bm, group, axis=1)  # (B,H,S,N)
+    Ch = jnp.repeat(C, group, axis=1)
+
+    def per_bh(xh, dth, Ah, Bmh, Chh):
+        # xh (S,P), dth (S,), Ah (), Bmh (S,N), Chh (S,N)
+        def step(state, inp):
+            xt, dtt, bt, ct = inp
+            a = jnp.exp(dtt * Ah)
+            state = a * state + dtt * bt[:, None] * xt[None, :]
+            y = ct @ state  # (P,)
+            return state, y
+
+        init = jnp.zeros((N, P), jnp.float32)
+        state, ys = jax.lax.scan(step, init, (xh, dth, Bmh, Chh))
+        return ys, state
+
+    fn = jax.vmap(jax.vmap(per_bh, in_axes=(0, 0, 0, 0, 0)), in_axes=(0, 0, None, 0, 0))
+    y, state = fn(
+        x.astype(jnp.float32),
+        dt.astype(jnp.float32),
+        A.astype(jnp.float32),
+        Bh.astype(jnp.float32),
+        Ch.astype(jnp.float32),
+    )
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, C: Array,
+                chunk: int = 128):
+    """Chunked SSD in pure jnp — same math as the Pallas kernel, with the
+    cross-chunk recurrence done by an associative scan (parallel depth
+    O(log S/Q) instead of a length-S while loop). This is the production
+    non-Pallas path used by model forward passes and the dry-run.
+
+    Layout matches the model side: x (B,S,H,P), dt (B,S,H),
+    Bm/C (B,S,G,N). Returns y (B,S,H,P).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    group = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // Q
+
+    xf = x.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, Q, H)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), group, axis=2).reshape(B, nc, Q, H, N)
+    Cf = jnp.repeat(C.astype(jnp.float32), group, axis=2).reshape(B, nc, Q, H, N)
+    Af = A.astype(jnp.float32)
+
+    l = dtf * Af  # (B,nc,Q,H) ≤ 0
+    Lc = jnp.cumsum(l, axis=2)
+    Ltot = Lc[:, :, -1, :]  # (B,nc,H)
+
+    # intra-chunk
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cf, Bf)  # (B,nc,H,Q,Q)
+    seg = Lc[:, :, :, None, :].transpose(0, 1, 4, 2, 3) \
+        - Lc[:, :, None, :, :].transpose(0, 1, 4, 2, 3)  # (B,nc,H,Q,Q) L_t−L_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri, jnp.exp(seg), 0.0)
+    dx = dtf[..., None] * xf  # (B,nc,Q,H,P)
+    y = jnp.einsum("bchqk,bckhp->bcqhp", scores * M, dx)
+
+    # per-chunk state injection and decay
+    w = jnp.exp(Ltot[:, :, None, :] - Lc) * dtf  # (B,nc,Q,H)
+    inj = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bf, w, xf)  # (B,nc,H,N,P)
+    decay = jnp.exp(Ltot)  # (B,nc,H)
+
+    # cross-chunk linear recurrence: s_c = decay_c · s_{c-1} + inj_c
+    def combine(a, b):
+        da, ia = a
+        db, ib = b
+        return da * db, ib + db[..., None, None] * ia
+
+    dec_s, inj_s = jax.lax.associative_scan(combine, (decay, inj), axis=1)
+    # state entering chunk c is inj_s[c-1]
+    state_in = jnp.concatenate(
+        [jnp.zeros_like(inj_s[:, :1]), inj_s[:, :-1]], axis=1
+    )  # (B,nc,H,N,P)
+    y = y + jnp.exp(Lc)[..., None] * jnp.einsum(
+        "bcqhn,bchnp->bcqhp", Cf, state_in
+    )
+
+    y = y.reshape(B, Sp, H, P)[:, :S]
+    return y.astype(x.dtype)

@@ -1,0 +1,21 @@
+"""Production meshes (TPU v5e target).
+
+``make_production_mesh`` is a function, not a module-level constant, so
+importing this module never touches jax device state (the dry-run must
+set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh for CPU smoke runs of the pjit code path."""
+    return jax.make_mesh((1, 1), ("data", "model"))

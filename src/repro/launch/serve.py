@@ -1,0 +1,93 @@
+"""Batched decode serving launcher.
+
+Prefills a batch of prompts through ``forward`` (building the KV caches
+by replaying tokens through ``serve_step`` — exact, cache-consistent),
+then decodes greedily. On CPU this demonstrates the full serving path
+with reduced configs; the production mesh lowers the same ``serve_step``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+      --batch 4 --prompt-len 32 --gen-len 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.steps import make_serve_step
+from repro.models import init_decode_state, init_model
+from repro.models.config import ModelConfig
+
+
+def serve_batch(
+    cfg: ModelConfig,
+    params,
+    prompts,  # (B, P[, K]) int32
+    *,
+    gen_len: int = 32,
+    cache_len: int | None = None,
+    cross_embeds=None,
+):
+    B = prompts.shape[0]
+    P = prompts.shape[1]
+    cache_len = cache_len or (P + gen_len)
+    state = init_decode_state(cfg, B, cache_len)
+    step = jax.jit(make_serve_step(cfg))
+
+    # prefill by replay (exact; a fused prefill is a perf lever, §Perf)
+    next_tok = None
+    for i in range(P):
+        b = {"tokens": prompts[:, i : i + 1]}
+        if cross_embeds is not None:
+            b["cross_embeds"] = cross_embeds
+        next_tok, state = step(params, b, state)
+
+    out = [next_tok]
+    for _ in range(gen_len - 1):
+        b = {"tokens": out[-1]}
+        if cross_embeds is not None:
+            b["cross_embeds"] = cross_embeds
+        nt, state = step(params, b, state)
+        out.append(nt)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.scaled_down()
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    shape = (args.batch, args.prompt_len)
+    if cfg.num_codebooks > 1:
+        shape += (cfg.num_codebooks,)
+    prompts = jax.random.randint(key, shape, 0, cfg.vocab_size)
+    cross = (
+        jax.random.normal(key, (args.batch, cfg.num_patches, cfg.vision_dim),
+                          jnp.dtype(cfg.dtype))
+        if cfg.vision_dim else None
+    )
+    t0 = time.time()
+    toks = serve_batch(cfg, params, prompts, gen_len=args.gen_len,
+                       cross_embeds=cross)
+    dt = time.time() - t0
+    n_new = toks.shape[1] * args.batch
+    print(f"generated {toks.shape} in {dt:.1f}s ({n_new / dt:.1f} tok/s)")
+    print("sample:", jax.device_get(toks[0, :16]).tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) combo.
+
+``build_dryrun`` assembles everything ``dryrun.py`` needs for one combo:
+the step function, abstract arguments (weak-type-correct, shardable, no
+device allocation), and in/out shardings. The same builders back the
+real train/serve launchers, which feed concrete arrays instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape, apply_shape_policy
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import init_decode_state, init_model
+from repro.models.config import ModelConfig
+from repro.optim import AdamW
+from repro.parallel.sharding import (
+    MODEL_AXIS,
+    batch_sharding,
+    data_axes,
+    kv_cache_sharding,
+    param_shardings,
+    replicated,
+)
+
+Array = jax.Array
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_model(cfg, k), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(optimizer: AdamW, params_abs):
+    return jax.eval_shape(optimizer.init, params_abs)
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.num_codebooks > 1:
+        toks = _sds((batch, seq, cfg.num_codebooks), jnp.int32)
+    else:
+        toks = _sds((batch, seq), jnp.int32)
+    specs = {"tokens": toks}
+    if cfg.vision_dim:
+        specs["cross_embeds"] = _sds(
+            (batch, cfg.num_patches, cfg.vision_dim), cfg.dtype
+        )
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_specs) -> Dict[str, Any]:
+    return {
+        k: batch_sharding(mesh, v.shape[0], v.ndim) for k, v in batch_specs.items()
+    }
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, cache_len))
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_abs):
+    """Walk the stacked decode state; leaves carry a leading repeat dim."""
+    axes = data_axes(mesh)
+
+    def fn(path, leaf):
+        ndim = leaf.ndim
+        shape = leaf.shape
+        name = str(getattr(path[-1], "name", getattr(path[-1], "key", "")))
+        if name in ("k", "v") and ndim == 5:  # stacked KV (R, B, Sc, Kv, Dh)
+            inner = kv_cache_sharding(mesh, shape[1], shape[2], shape[3])
+            return NamedSharding(mesh, P(None, *inner.spec))
+        # MambaState stacked: conv (R, B, W-1, C), ssm (R, B, H, N, P)
+        if name == "ssm" and ndim == 5:
+            h = shape[2]
+            ax = MODEL_AXIS if h % mesh.shape.get(MODEL_AXIS, 1) == 0 else None
+            bsh = batch_sharding(mesh, shape[1], 1).spec
+            bax = bsh[0] if bsh else None
+            return NamedSharding(mesh, P(None, bax, ax, None, None))
+        if name == "conv" and ndim == 4:
+            bsh = batch_sharding(mesh, shape[1], 1).spec
+            bax = bsh[0] if bsh else None
+            return NamedSharding(mesh, P(None, bax, None, None))
+        return replicated(mesh)
+
+    return jax.tree_util.tree_map_with_path(fn, state_abs)
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    # Buffer donation mirrors production: train steps donate params +
+    # optimizer state (updated in place), serve steps donate the KV/SSM
+    # cache. Without it the dry-run double-buffers the largest state and
+    # overstates peak memory ~2×.
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def build_dryrun(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    *,
+    remat: str = "none",
+    dtype: str = "bfloat16",
+    unroll: bool = True,
+    fsdp: bool = False,
+    zero1: bool = False,  # shard ONLY optimizer moments over data (ZeRO-1)
+    cfg_overrides: Optional[dict] = None,
+    last_logits_only: bool = True,
+) -> DryRunSpec:
+    """Assemble (fn, abstract args, shardings) for one (arch × shape)."""
+    cfg = apply_shape_policy(cfg, shape).replace(dtype=dtype)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    nexp = cfg.moe.physical_experts if cfg.moe else None
+    params_abs = abstract_params(cfg)
+    p_shard = param_shardings(params_abs, mesh, nexp, fsdp=fsdp)
+
+    if shape.kind == "train":
+        optimizer = AdamW(lr=1e-4)
+        opt_abs = abstract_opt_state(optimizer, params_abs)
+        # moments shard like params; step replicated
+        o_shard = type(opt_abs)(
+            step=replicated(mesh),
+            mu=param_shardings(opt_abs.mu, mesh, nexp, fsdp=fsdp or zero1),
+            nu=param_shardings(opt_abs.nu, mesh, nexp, fsdp=fsdp or zero1),
+        )
+        batch_abs = token_specs(cfg, shape.global_batch, shape.seq_len)
+        b_shard = batch_shardings(cfg, mesh, batch_abs)
+        fn = make_train_step(cfg, optimizer, remat=remat, unroll=unroll)
+        out_shardings = (p_shard, o_shard, None)
+        return DryRunSpec(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=out_shardings,
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch_abs = token_specs(cfg, shape.global_batch, shape.seq_len)
+        b_shard = batch_shardings(cfg, mesh, batch_abs)
+        fn = make_prefill_step(cfg, unroll=unroll, last_logits_only=last_logits_only)
+        return DryRunSpec(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(params_abs, batch_abs),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=None,
+        )
+
+    # decode: one token, cache of seq_len
+    batch_abs = token_specs(cfg, shape.global_batch, 1)
+    b_shard = batch_shardings(cfg, mesh, batch_abs)
+    state_abs = decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    s_shard = decode_state_shardings(cfg, mesh, state_abs)
+    fn = make_serve_step(cfg, unroll=unroll)
+    return DryRunSpec(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(params_abs, batch_abs, state_abs),
+        in_shardings=(p_shard, b_shard, s_shard),
+        out_shardings=(None, s_shard),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,97 @@
+"""Step functions: pjit-able train_step / serve_step per architecture.
+
+``make_train_step`` returns f(params, opt_state, batch) → (params,
+opt_state, metrics); ``make_serve_step`` returns f(params, batch, state)
+→ (next_tokens, state). ``batch`` is a dict so VLM image embeddings ride
+along uniformly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import lm_loss
+from repro.models import decode_step, forward
+from repro.models.config import ModelConfig
+from repro.optim import AdamW
+
+Array = jax.Array
+Batch = Dict[str, Array]
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    *,
+    remat: str = "none",
+    use_flash: bool = False,
+    use_pallas_ssd: bool = False,
+    unroll: bool = False,
+) -> Callable:
+    def loss_fn(params, batch: Batch):
+        logits, aux = forward(
+            params,
+            batch["tokens"],
+            cfg,
+            cross_embeds=batch.get("cross_embeds"),
+            use_flash=use_flash,
+            use_pallas_ssd=use_pallas_ssd,
+            remat=remat,
+            unroll=unroll,
+        )
+        ce = lm_loss(logits, batch["tokens"])
+        return ce + aux, (ce, aux)
+
+    def train_step(params, opt_state, batch: Batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "ce": ce, "moe_aux": aux}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True,
+                    unroll: bool = False) -> Callable:
+    def serve_step(params, batch: Batch, state):
+        logits, state = decode_step(
+            params,
+            batch["tokens"],
+            state,
+            cfg,
+            cross_embeds=batch.get("cross_embeds"),
+            start_pos=batch.get("start_pos"),
+            unroll=unroll,
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, state
+
+    return serve_step
+
+
+def make_prefill_step(
+    cfg: ModelConfig, *, use_flash: bool = False, use_pallas_ssd: bool = False,
+    unroll: bool = False, last_logits_only: bool = True,
+) -> Callable:
+    """Full-sequence forward (the prefill shape lowers this)."""
+
+    def prefill_step(params, batch: Batch):
+        logits, _ = forward(
+            params,
+            batch["tokens"],
+            cfg,
+            cross_embeds=batch.get("cross_embeds"),
+            use_flash=use_flash,
+            use_pallas_ssd=use_pallas_ssd,
+            unroll=unroll,
+            last_logits_only=last_logits_only,
+        )
+        # next-token for the last position of every sequence
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    return prefill_step

@@ -1,0 +1,12 @@
+from repro.models.config import MambaConfig, ModelConfig, MoEConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+)
+
+__all__ = [
+    "MambaConfig", "ModelConfig", "MoEConfig",
+    "decode_step", "forward", "init_decode_state", "init_model",
+]

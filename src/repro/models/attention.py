@@ -1,0 +1,201 @@
+"""Attention mixers: global ("A"), sliding-window ("L"), cross ("X").
+
+Covers every attention variant in the assigned pool: GQA (all), QKV bias
+(qwen1.5), qk-norm (qwen3), sliding window (gemma3 local layers and the
+long_500k SWA variant of dense archs), cross-attention over projected
+image patches (llama-3.2-vision), and logit soft-capping (gemma-style,
+optional).
+
+Forward (train/prefill) uses either the jnp reference attention or the
+Pallas flash kernel (``use_flash``). Decode uses the ring-buffer
+``LayerKVCache`` — O(S_cache) per token, GSPMD-shardable.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.kvcache import LayerKVCache, cache_write, valid_mask
+from repro.models.layers import apply_norm, dense_init, rope
+
+Array = jax.Array
+
+
+def init_attention(key: Array, cfg: ModelConfig, kind: str) -> dict:
+    E, H, Kv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    kv_in = cfg.vision_dim if kind == "X" else E
+    p = {
+        "wq": dense_init(ks[0], (E, H, Dh), dtype, fan_in=E),
+        "wk": dense_init(ks[1], (kv_in, Kv, Dh), dtype, fan_in=kv_in),
+        "wv": dense_init(ks[2], (kv_in, Kv, Dh), dtype, fan_in=kv_in),
+        "wo": dense_init(ks[3], (H, Dh, E), dtype, fan_in=H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dtype)
+        p["bk"] = jnp.zeros((Kv, Dh), dtype)
+        p["bv"] = jnp.zeros((Kv, Dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((Dh,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((Dh,), dtype)}
+    return p
+
+
+def _project_qkv(params: dict, x: Array, kv_src: Array, cfg: ModelConfig):
+    q = jnp.einsum("bse,ehd->bshd", x, params["wq"])
+    k = jnp.einsum("bse,ehd->bshd", kv_src, params["wk"])
+    v = jnp.einsum("bse,ehd->bshd", kv_src, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        q = apply_norm(params["q_norm"], q, "rmsnorm")
+        k = apply_norm(params["k_norm"], k, "rmsnorm")
+    return q, k, v
+
+
+def _softcap(logits: Array, cap: float) -> Array:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _ref_attention(q, k, v, *, causal: bool, window: Optional[int], softcap: float):
+    """(B,S,H,D)x(B,Sk,Kv,D) GQA attention, fp32 softmax."""
+    B, S, H, D = q.shape
+    Kv = k.shape[2]
+    group = H // Kv
+    kk = jnp.repeat(k, group, axis=2)
+    vv = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * (D ** -0.5)
+    logits = _softcap(logits, softcap)
+    Sk = k.shape[1]
+    qpos = jnp.arange(S)[:, None] + (Sk - S)  # right-aligned (prefill: Sk == S)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_forward(
+    params: dict,
+    x: Array,
+    cfg: ModelConfig,
+    kind: str,
+    positions: Array,
+    *,
+    cross_kv: Optional[Array] = None,
+    use_flash: bool = False,
+) -> Array:
+    """Training / prefill attention. x: (B, S, E) → (B, S, E)."""
+    if kind == "X":
+        assert cross_kv is not None
+        q, k, v = _project_qkv(params, x, cross_kv, cfg)
+        out = _ref_attention(
+            q, k, v, causal=False, window=None, softcap=cfg.attn_logit_softcap
+        )
+    else:
+        q, k, v = _project_qkv(params, x, x, cfg)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if cfg.attn_q_seq_shard:
+            # 2-D sequence parallelism (§Perf): pin the query-position axis
+            # to the model axis so the O(S²) score/PV matmuls divide by it
+            # even when heads don't.
+            from jax.sharding import PartitionSpec as P
+
+            U = P.UNCONSTRAINED
+            q = jax.lax.with_sharding_constraint(
+                q, P(U, cfg.attn_q_seq_shard, U, U)
+            )
+        window = cfg.sliding_window if kind == "L" else None
+        if use_flash and not cfg.attn_logit_softcap:
+            from repro.kernels.flash_attention import ops as fa
+
+            out = fa.attention(
+                jnp.transpose(q, (0, 2, 1, 3)),
+                jnp.transpose(k, (0, 2, 1, 3)),
+                jnp.transpose(v, (0, 2, 1, 3)),
+                causal=True,
+                window=window,
+            )
+            out = jnp.transpose(out, (0, 2, 1, 3))
+        else:
+            out = _ref_attention(
+                q, k, v, causal=True, window=window, softcap=cfg.attn_logit_softcap
+            )
+    return jnp.einsum("bshd,hde->bse", out, params["wo"])
+
+
+def attention_decode(
+    params: dict,
+    x: Array,
+    cfg: ModelConfig,
+    kind: str,
+    cache: Optional[LayerKVCache],
+    *,
+    cross_kv: Optional[Array] = None,
+    start_pos: Optional[Array] = None,  # (B,) continuous-batching isolation
+) -> Tuple[Array, Optional[LayerKVCache]]:
+    """Single-token decode. x: (B, 1, E) → ((B, 1, E), cache')."""
+    if kind == "X":
+        # Cross-attention is stateless: the image KV is tiny vs. the text
+        # cache; recompute (the projector output is shared across steps).
+        y = attention_forward(params, x, cfg, kind, None, cross_kv=cross_kv)
+        return y, cache
+
+    assert cache is not None
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    pos_cur = cache.length  # scalar: position of this token
+    q = rope(q, pos_cur[None, None].astype(jnp.int32) + jnp.zeros((x.shape[0], 1), jnp.int32), cfg.rope_theta)
+    k_new = rope(k_new, pos_cur[None, None].astype(jnp.int32) + jnp.zeros((x.shape[0], 1), jnp.int32), cfg.rope_theta)
+
+    window = cfg.sliding_window if kind == "L" else None
+
+    if cfg.decode_flash_shard:
+        from repro.models.kvcache import LayerKVCache
+        from repro.parallel.collectives import flash_decode
+
+        out, ck, cv, pos = flash_decode(
+            q, k_new, v_new, cache.k, cache.v, cache.pos, cache.length,
+            axis=cfg.decode_flash_shard, window=window,
+            softcap=cfg.attn_logit_softcap,
+        )
+        cache = LayerKVCache(k=ck, v=cv, pos=pos, length=cache.length + 1)
+        y = jnp.einsum("bshd,hde->bse", out, params["wo"])
+        return y, cache
+
+    cache = cache_write(cache, k_new, v_new)
+    mask = valid_mask(cache, window, start_pos)  # (Sc,) or (B, Sc)
+
+    B, _, H, D = q.shape
+    Kv = cache.k.shape[2]
+    group = H // Kv
+    kk = jnp.repeat(cache.k, group, axis=2)  # (B, Sc, H, D)
+    vv = jnp.repeat(cache.v, group, axis=2)
+    logits = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * (D ** -0.5)
+    logits = _softcap(logits, cfg.attn_logit_softcap)
+    if mask.ndim == 2:  # per-sample (B, Sc)
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    else:
+        logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vv.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshd,hde->bse", out, params["wo"])
+    return y, cache

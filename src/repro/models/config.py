@@ -1,0 +1,185 @@
+"""Model configuration covering every assigned architecture family.
+
+A model is described by a *layer pattern*: the repeating unit of
+(mixer, mlp) kinds. ``num_layers`` must be a multiple of the pattern
+length; the stack is ``lax.scan``-ned over ``num_layers / len(pattern)``
+super-blocks with weights stacked on a leading repeat axis (keeps HLO
+size and compile time independent of depth — DESIGN.md §5).
+
+Mixer kinds:  "A" global causal attention · "L" sliding-window attention
+              · "X" cross-attention (VLM image layers) · "M" Mamba2 SSD
+MLP kinds:    "D" dense MLP · "E" mixture-of-experts · "N" none
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ffn: int
+    num_shared_experts: int = 0
+    shared_ffn: int = 0  # hidden width of the fused shared-expert MLP
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # §Perf lever: physical expert count padded up so the expert axis
+    # divides the model mesh axis (e.g. granite 40 → 48 over 16 chips).
+    # Padded experts get −inf router logits and are never selected; only
+    # the weight tensors grow. 0 → no padding.
+    padded_experts: int = 0
+
+    @property
+    def physical_experts(self) -> int:
+        return self.padded_experts or self.num_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        di = self.d_inner(d_model)
+        assert di % self.head_dim == 0
+        return di // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 → d_model // num_heads
+
+    # layer pattern (repeating unit)
+    mixer_pattern: Tuple[str, ...] = ("A",)
+    mlp_pattern: Tuple[str, ...] = ("D",)
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 4096  # used by "L" mixers
+    attn_logit_softcap: float = 0.0
+
+    # norms / activations
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm | layernorm_np (non-parametric)
+    act: str = "silu"
+    glu: bool = True
+
+    moe: Optional[MoEConfig] = None
+    moe_dispatch: str = "einsum"  # "einsum" (GShard baseline) | "gather" (§Perf)
+    mamba: Optional[MambaConfig] = None
+    # §Perf lever: mesh axis to shard attention *query positions* over when
+    # the head count doesn't divide the model axis (e.g. granite's 24 heads
+    # vs model=16, which otherwise replicates the O(S²) score compute).
+    # None = let GSPMD decide. Requires an ambient mesh with this axis.
+    attn_q_seq_shard: Optional[str] = None
+    # §Perf lever: keep the residual stream sequence-sharded over this mesh
+    # axis between blocks (full sequence parallelism) — converts the
+    # tensor-parallel partial-sum all-reduces into reduce-scatters.
+    residual_seq_shard: Optional[str] = None
+    # §Perf lever: mesh axis for distributed flash-decode when the KV cache
+    # is sequence-sharded (kv_heads don't divide "model"). Replaces GSPMD's
+    # per-token full-cache all-gather with O(B·H·Dh) partial-softmax psums
+    # (repro.parallel.collectives.flash_decode). Needs an ambient mesh.
+    decode_flash_shard: Optional[str] = None
+
+    # VLM (cross-attention) frontend stub
+    vision_dim: int = 0
+    num_patches: int = 0
+
+    # audio (codebook) frontend stub
+    num_codebooks: int = 1
+
+    tie_embeddings: bool = False
+    dtype: str = "float32"  # param/compute dtype ("bfloat16" for dry-run)
+
+    # citation of the source model card / paper for this config
+    source: str = ""
+
+    def __post_init__(self):
+        assert len(self.mixer_pattern) == len(self.mlp_pattern), self.name
+        assert self.num_layers % len(self.mixer_pattern) == 0, (
+            f"{self.name}: {self.num_layers} layers not divisible by "
+            f"pattern length {len(self.mixer_pattern)}"
+        )
+        if self.head_dim == 0:
+            assert self.num_heads > 0
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if any(m == "E" for m in self.mlp_pattern):
+            assert self.moe is not None, self.name
+        if any(m == "M" for m in self.mixer_pattern):
+            assert self.mamba is not None, self.name
+        if any(m == "X" for m in self.mixer_pattern):
+            assert self.vision_dim > 0 and self.num_patches > 0, self.name
+
+    @property
+    def num_repeats(self) -> int:
+        return self.num_layers // len(self.mixer_pattern)
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(m in ("A", "L", "X") for m in self.mixer_pattern)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no mixer needs an unbounded KV cache ("A"/"X" absent
+        or bounded): SSM-only and local-attention-only stacks qualify."""
+        return all(m in ("M", "L") for m in self.mixer_pattern)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def scaled_down(self) -> "ModelConfig":
+        """Reduced variant of the same family for CPU smoke tests:
+        pattern preserved, ≤2 pattern repeats, d_model ≤ 256, ≤4 experts."""
+        period = len(self.mixer_pattern)
+        d_model = min(self.d_model, 256)
+        num_heads = min(self.num_heads, 4)
+        num_kv = max(1, min(self.num_kv_heads, num_heads))
+        while num_heads % num_kv:
+            num_kv -= 1
+        head_dim = max(8, d_model // num_heads)
+        kw = dict(
+            num_layers=period,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 16),
+            dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                expert_ffn=min(self.moe.expert_ffn, 64),
+                shared_ffn=min(self.moe.shared_ffn, 64) if self.moe.shared_ffn else 0,
+            )
+        if self.mamba is not None:
+            kw["mamba"] = dataclasses.replace(
+                self.mamba, d_state=min(self.mamba.d_state, 32), head_dim=32
+            )
+        if self.vision_dim:
+            kw["vision_dim"] = min(self.vision_dim, 64)
+            kw["num_patches"] = min(self.num_patches, 16)
+        return self.replace(**kw)

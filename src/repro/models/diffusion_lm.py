@@ -1,0 +1,152 @@
+"""Diffusion language modeling: the assigned transformer backbones as
+score networks over token-embedding space (`--mode diffusion`).
+
+This is the §Arch-applicability integration (DESIGN.md §4): the paper's
+adaptive SDE solver accelerates *score-based generation*; autoregressive
+decoding has no reverse diffusion to solve, but any backbone from the
+zoo can instead denoise a whole sequence of continuous token embeddings
+(Diffusion-LM, Li et al. 2022; SSD-LM; SEDD-style setups), and then the
+paper's solver applies verbatim — per-sample adaptive step sizes
+included.
+
+Construction:
+  * tokens → frozen-at-init embedding table E (V, D_e), unit-norm rows;
+  * forward process: VP diffusion on the (B, S, D_e) embedding tensor;
+  * score net: the configured backbone run NON-causally (pattern "A"
+    mixers attend bidirectionally) with a time-conditioning vector added
+    to every position, predicting the noise;
+  * decoding: nearest-embedding rounding (argmax E·x̂₀).
+
+The backbone reuses repro.models.transformer's blocks unchanged — what
+changes is only the head (noise prediction instead of logits) and the
+causal mask (off).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _ref_attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, init_mlp, init_norm,
+    timestep_embedding,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionLMConfig:
+    backbone: ModelConfig      # any dense-family zoo config (reduced or full)
+    embed_dim: int = 64        # continuous token-embedding dimension
+    t_dim: int = 128
+
+    def __post_init__(self):
+        assert all(m in ("A", "L") for m in self.backbone.mixer_pattern), (
+            "diffusion-LM backbones use self-attention mixers (the solver "
+            "is inapplicable to AR decode, not to the architecture)"
+        )
+
+
+def init_diffusion_lm(cfg: DiffusionLMConfig, key: Array) -> Dict[str, Any]:
+    bb = cfg.backbone
+    ks = jax.random.split(key, 8)
+    dtype = jnp.dtype(bb.dtype)
+    # frozen unit-norm token embedding (the "vocabulary geometry")
+    emb = jax.random.normal(ks[0], (bb.vocab_size, cfg.embed_dim), jnp.float32)
+    emb = emb / jnp.linalg.norm(emb, axis=1, keepdims=True)
+
+    R = bb.num_repeats
+
+    def init_layer(k):
+        ka, km, kn = jax.random.split(k, 3)
+        return {
+            "attn": init_attention(ka, bb, "A"),
+            "mlp": init_mlp(km, bb.d_model, bb.d_ff, bb.glu, dtype),
+            "norm1": init_norm(kn, bb.d_model, bb.norm_type, dtype),
+            "norm2": init_norm(kn, bb.d_model, bb.norm_type, dtype),
+        }
+
+    layers = jax.vmap(init_layer)(jax.random.split(ks[1], R))
+    return {
+        "token_embed": emb.astype(dtype),  # frozen (stop-gradient in loss)
+        "in_proj": dense_init(ks[2], (cfg.embed_dim, bb.d_model), dtype),
+        "t_w1": dense_init(ks[3], (cfg.t_dim, bb.d_model), dtype),
+        "t_w2": dense_init(ks[4], (bb.d_model, bb.d_model), dtype),
+        "layers": layers,
+        "final_norm": init_norm(ks[5], bb.d_model, bb.norm_type, dtype),
+        "out_proj": jnp.zeros((bb.d_model, cfg.embed_dim), dtype),
+    }
+
+
+def diffusion_lm_forward(params, x: Array, t: Array,
+                         cfg: DiffusionLMConfig) -> Array:
+    """x (B, S, D_e) noisy embeddings, t (B,) → noise prediction."""
+    bb = cfg.backbone
+    h = x @ params["in_proj"]
+    temb = timestep_embedding(t, cfg.t_dim).astype(h.dtype)
+    temb = jax.nn.silu(temb @ params["t_w1"]) @ params["t_w2"]
+    h = h + temb[:, None, :]
+
+    def layer(h, lp):
+        hn = apply_norm(lp["norm1"], h, bb.norm_type)
+        q = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wq"])
+        k = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wk"])
+        v = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wv"])
+        att = _ref_attention(q, k, v, causal=False, window=None, softcap=0.0)
+        h = h + jnp.einsum("bshd,hde->bse", att, lp["attn"]["wo"])
+        hn = apply_norm(lp["norm2"], h, bb.norm_type)
+        h = h + apply_mlp(lp["mlp"], hn, bb.act, bb.glu)
+        return h, None
+
+    h, _ = jax.lax.scan(layer, h, params["layers"])
+    h = apply_norm(params["final_norm"], h, bb.norm_type)
+    return h @ params["out_proj"]
+
+
+def embed(params, tokens: Array) -> Array:
+    return jnp.take(jax.lax.stop_gradient(params["token_embed"]), tokens, axis=0)
+
+
+def round_to_tokens(params, x0_hat: Array) -> Array:
+    """Nearest-embedding decoding: argmax over E · x̂₀."""
+    sims = jnp.einsum("bsd,vd->bsv", x0_hat, params["token_embed"])
+    return jnp.argmax(sims, axis=-1).astype(jnp.int32)
+
+
+def make_score_fn(params, cfg: DiffusionLMConfig, sde):
+    def score(x: Array, t: Array) -> Array:
+        _, std = sde.marginal(t)
+        return -diffusion_lm_forward(params, x, t, cfg) / std.reshape(-1, 1, 1)
+
+    return score
+
+
+def diffusion_lm_loss(params, cfg: DiffusionLMConfig, sde, tokens: Array,
+                      key: Array) -> Array:
+    """DSM on embeddings (paper Eq. 3 in the embedding space)."""
+    x0 = embed(params, tokens)
+    kt, kz = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.uniform(kt, (B,), minval=sde.t_eps, maxval=sde.T)
+    z = jax.random.normal(kz, x0.shape, x0.dtype)
+    xt = sde.perturb(x0, t, z)
+    pred = diffusion_lm_forward(params, xt, t, cfg)
+    return 0.5 * jnp.mean(jnp.sum((pred - z) ** 2, axis=-1))
+
+
+def generate(params, cfg: DiffusionLMConfig, sde, batch: int, seq: int,
+             key: Array, *, method: str = "adaptive", **solver_kw):
+    """Sample token sequences via the paper's solver; returns
+    (tokens (B, S), SolveResult)."""
+    from repro.core.sampling import sample as _sample
+
+    score = make_score_fn(params, cfg, sde)
+    res = _sample(sde, score, (batch, seq, cfg.embed_dim), key,
+                  method=method, **solver_kw)
+    return round_to_tokens(params, res.x), res

@@ -1,0 +1,152 @@
+"""DiT — transformer score network over image patches (adaLN conditioning).
+
+This is how the paper's technique becomes a first-class feature of the
+LM framework (DESIGN.md §4): any dense ``ModelConfig`` doubles as the
+backbone of a time-conditioned score network. Patchified image tokens
+run through the same attention/MLP blocks (non-causal), modulated per
+block by adaLN(t). ``score_apply`` exposes the s(x, t) signature every
+solver in ``repro.core`` consumes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _ref_attention, init_attention
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    dense_init,
+    init_mlp,
+    init_norm,
+    rope,
+    timestep_embedding,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    image_size: int = 32
+    channels: int = 3
+    patch: int = 4
+    d_model: int = 256
+    num_layers: int = 6
+    num_heads: int = 8
+    d_ff: int = 1024
+    dtype: str = "float32"
+
+    @property
+    def tokens(self) -> int:
+        return (self.image_size // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    def as_model_config(self) -> ModelConfig:
+        return ModelConfig(
+            name="dit-backbone",
+            arch_type="dense",
+            num_layers=self.num_layers,
+            d_model=self.d_model,
+            num_heads=self.num_heads,
+            num_kv_heads=self.num_heads,
+            d_ff=self.d_ff,
+            vocab_size=8,  # unused
+            dtype=self.dtype,
+        )
+
+
+def init_dit(cfg: DiTConfig, key: Array) -> Dict[str, Any]:
+    mcfg = cfg.as_model_config()
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    R = cfg.num_layers
+
+    def init_layer(k):
+        ka, km, kc = jax.random.split(k, 3)
+        return {
+            "attn": init_attention(ka, mcfg, "A"),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, True, dtype),
+            "norm1": init_norm(kc, cfg.d_model, "layernorm_np", dtype),
+            "norm2": init_norm(kc, cfg.d_model, "layernorm_np", dtype),
+            # adaLN: 6 modulation vectors from the time embedding
+            "ada": jnp.zeros((cfg.d_model, 6 * cfg.d_model), dtype),
+            "ada_b": jnp.zeros((6 * cfg.d_model,), dtype),
+        }
+
+    layers = jax.vmap(init_layer)(jax.random.split(ks[0], R))
+    return {
+        "patch_in": dense_init(ks[1], (cfg.patch_dim, cfg.d_model), dtype),
+        "pos_emb": 0.02 * jax.random.normal(ks[2], (cfg.tokens, cfg.d_model), jnp.float32).astype(dtype),
+        "t_mlp1": dense_init(ks[3], (256, cfg.d_model), dtype),
+        "t_mlp2": dense_init(ks[4], (cfg.d_model, cfg.d_model), dtype),
+        "layers": layers,
+        "final_norm": init_norm(ks[5], cfg.d_model, "layernorm_np", dtype),
+        "final_ada": jnp.zeros((cfg.d_model, 2 * cfg.d_model), dtype),
+        "final_ada_b": jnp.zeros((2 * cfg.d_model,), dtype),
+        "patch_out": jnp.zeros((cfg.d_model, cfg.patch_dim), dtype),
+    }
+
+
+def _patchify(x: Array, cfg: DiTConfig) -> Array:
+    B, H, W, C = x.shape
+    p = cfg.patch
+    x = x.reshape(B, H // p, p, W // p, p, C)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, cfg.tokens, cfg.patch_dim)
+
+
+def _unpatchify(t: Array, cfg: DiTConfig) -> Array:
+    B = t.shape[0]
+    p = cfg.patch
+    n = cfg.image_size // p
+    t = t.reshape(B, n, n, p, p, cfg.channels)
+    return t.transpose(0, 1, 3, 2, 4, 5).reshape(
+        B, cfg.image_size, cfg.image_size, cfg.channels
+    )
+
+
+def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig) -> Array:
+    """x (B, H, W, C), t (B,) → same-shape output (raw network output)."""
+    mcfg = cfg.as_model_config()
+    h = _patchify(x, cfg) @ params["patch_in"] + params["pos_emb"]
+
+    temb = timestep_embedding(t, 256).astype(h.dtype)
+    temb = jax.nn.silu(temb @ params["t_mlp1"]) @ params["t_mlp2"]  # (B, D)
+
+    def layer(h, lp):
+        mod = jax.nn.silu(temb) @ lp["ada"] + lp["ada_b"]  # (B, 6D)
+        s1, b1, g1, s2, b2, g2 = jnp.split(mod[:, None, :], 6, axis=-1)
+        hn = apply_norm(lp["norm1"], h, "layernorm_np") * (1 + s1) + b1
+        q = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wq"])
+        k = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wk"])
+        v = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wv"])
+        att = _ref_attention(q, k, v, causal=False, window=None, softcap=0.0)
+        h = h + g1 * jnp.einsum("bshd,hde->bse", att, lp["attn"]["wo"])
+        hn = apply_norm(lp["norm2"], h, "layernorm_np") * (1 + s2) + b2
+        h = h + g2 * apply_mlp(lp["mlp"], hn, "silu", True)
+        return h, None
+
+    h, _ = jax.lax.scan(layer, h, params["layers"])
+    mod = jax.nn.silu(temb) @ params["final_ada"] + params["final_ada_b"]
+    s, b = jnp.split(mod[:, None, :], 2, axis=-1)
+    h = apply_norm(params["final_norm"], h, "layernorm_np") * (1 + s) + b
+    return _unpatchify(h @ params["patch_out"], cfg)
+
+
+def make_score_fn(params, cfg: DiTConfig, sde):
+    """Wrap the raw net into s(x,t) = net(x,t)/std(t) (noise-pred param.)."""
+
+    def score(x: Array, t: Array) -> Array:
+        _, std = sde.marginal(t)
+        out = dit_forward(params, x, t, cfg)
+        return -out / std.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    return score

@@ -1,0 +1,79 @@
+"""KV cache and SSM state containers for single-token decode.
+
+Caches are functional pytrees. Ring-buffer semantics support
+sliding-window layers: slot = position mod cache_len, and a ``pos``
+array records which absolute position each slot currently holds so the
+attention mask is exact even after wrap-around. A full-length cache is
+just the special case cache_len ≥ max positions (no wrap).
+
+Batch elements decode in lockstep (one new token for all), so ``pos``
+is shared across the batch: shape (cache_len,), −1 = empty.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LayerKVCache:
+    k: Array    # (B, S_cache, Kv, Dh)
+    v: Array    # (B, S_cache, Kv, Dh)
+    pos: Array  # (S_cache,) absolute position held by each slot, -1 empty
+    length: Array  # () int32 — number of tokens seen so far
+
+
+def init_kv_cache(batch: int, cache_len: int, kv_heads: int, head_dim: int, dtype) -> LayerKVCache:
+    return LayerKVCache(
+        k=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, cache_len, kv_heads, head_dim), dtype),
+        pos=jnp.full((cache_len,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_write(cache: LayerKVCache, k_new: Array, v_new: Array) -> LayerKVCache:
+    """Write one token's k/v (B, 1, Kv, Dh) at slot = length mod cache_len."""
+    S = cache.k.shape[1]
+    slot = (cache.length % S).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(cache.pos, cache.length[None], (slot,))
+    return LayerKVCache(k=k, v=v, pos=pos, length=cache.length + 1)
+
+
+def valid_mask(cache: LayerKVCache, window: int | None,
+               start_pos: Array | None = None) -> Array:
+    """Visibility of cache slots to the current (just-written) token.
+
+    Returns (S_cache,) bool, or (B, S_cache) when ``start_pos`` (B,) is
+    given — continuous-batching isolation: each batch lane only sees
+    positions ≥ its own request's start (repro.serving.scheduler)."""
+    cur = cache.length - 1  # position of the newest token
+    m = jnp.logical_and(cache.pos >= 0, cache.pos <= cur)
+    if window is not None:
+        m = jnp.logical_and(m, cache.pos > cur - window)
+    if start_pos is not None:
+        m = jnp.logical_and(m[None, :], cache.pos[None, :] >= start_pos[:, None])
+    return m
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MambaState:
+    conv: Array  # (B, conv_width-1, channels) rolling conv inputs
+    ssm: Array   # (B, H, N, P) fp32 recurrent state
+
+
+def init_mamba_state(batch: int, conv_width: int, channels: int, heads: int,
+                     d_state: int, head_dim: int, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, conv_width - 1, channels), dtype),
+        ssm=jnp.zeros((batch, heads, d_state, head_dim), jnp.float32),
+    )

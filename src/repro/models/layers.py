@@ -1,0 +1,124 @@
+"""Shared primitive layers: norms, rotary embeddings, MLPs, initializers.
+
+Parameters are plain dict pytrees; every ``init_*`` returns a dict and
+every ``apply_*`` is a pure function. Compute follows the config dtype;
+norms and softmax always accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key: Array, shape, dtype, *, fan_in: Optional[int] = None) -> Array:
+    """Truncated-normal with 1/sqrt(fan_in) scale (fan_in = shape[0] default)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key: Array, dim: int, norm_type: str, dtype) -> dict:
+    del key
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if norm_type == "layernorm_np":  # non-parametric (OLMo)
+        return {}
+    raise ValueError(norm_type)
+
+
+def apply_norm(params: dict, x: Array, norm_type: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    elif norm_type in ("layernorm", "layernorm_np"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if norm_type == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(norm_type)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Apply rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP (optionally gated)
+# --------------------------------------------------------------------------
+
+def init_mlp(key: Array, d_model: int, d_ff: int, glu: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype),
+    }
+    if glu:
+        p["w_gate"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def _act(x: Array, name: str) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def apply_mlp(params: dict, x: Array, act: str, glu: bool) -> Array:
+    h = x @ params["w_in"]
+    if glu:
+        h = _act(x @ params["w_gate"], act) * h
+    else:
+        h = _act(h, act)
+    return h @ params["w_out"]
+
+
+# --------------------------------------------------------------------------
+# time embedding (diffusion score networks)
+# --------------------------------------------------------------------------
+
+def timestep_embedding(t: Array, dim: int, max_period: float = 10_000.0) -> Array:
+    """Sinusoidal embedding of continuous t ∈ [0, 1]; shape (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None, :] * 1000.0
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) mixer layer — used by mamba2-2.7b and jamba's "M" layers.
+
+Follows arXiv:2405.21060 with one sharding-motivated deviation
+(DESIGN.md §5): the fused ``in_proj`` is split into separate z/x/B/C/dt
+projections so the tensor-parallel "model" axis can shard z and x on
+head boundaries while the small B/C/dt projections stay replicated. The
+math is identical to the fused projection.
+
+Sequence mixing runs through the chunked SSD scan
+(``repro.kernels.ssd``: Pallas on TPU, the same chunked math in pure jnp
+otherwise), preceded by short causal depthwise convolutions on x, B, C.
+Decode keeps a (conv, ssm) recurrent state — O(1) per token, which is
+why the SSM archs run long_500k natively.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.kvcache import MambaState
+from repro.models.layers import apply_norm, dense_init
+
+Array = jax.Array
+
+
+def init_mamba(key: Array, cfg: ModelConfig) -> dict:
+    mc = cfg.mamba
+    E = cfg.d_model
+    di = mc.d_inner(E)
+    H = mc.num_heads(E)
+    G, N, W = mc.n_groups, mc.d_state, mc.conv_width
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 10)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default).
+    u = jax.random.uniform(ks[0], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "in_z": dense_init(ks[1], (E, di), dtype),
+        "in_x": dense_init(ks[2], (E, di), dtype),
+        "in_B": dense_init(ks[3], (E, G * N), dtype),
+        "in_C": dense_init(ks[4], (E, G * N), dtype),
+        "in_dt": dense_init(ks[5], (E, H), dtype),
+        "conv_x": dense_init(ks[6], (W, di), dtype, fan_in=W),
+        "conv_B": dense_init(ks[7], (W, G * N), dtype, fan_in=W),
+        "conv_C": dense_init(ks[8], (W, G * N), dtype, fan_in=W),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out": dense_init(ks[9], (di, E), dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv along sequence. x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+def _conv_step(state: Array, x_new: Array, w: Array) -> Tuple[Array, Array]:
+    """Single-token conv. state (B, W-1, C), x_new (B, C)."""
+    full = jnp.concatenate([state, x_new[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w)
+    return full[:, 1:, :], y
+
+
+def _project(params: dict, x: Array, cfg: ModelConfig):
+    mc = cfg.mamba
+    H = mc.num_heads(cfg.d_model)
+    z = x @ params["in_z"]
+    xs = x @ params["in_x"]
+    Bm = x @ params["in_B"]
+    C = x @ params["in_C"]
+    dt_raw = x @ params["in_dt"]  # (..., H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return z, xs, Bm, C, dt
+
+
+def mamba_forward(
+    params: dict, x: Array, cfg: ModelConfig, *, use_pallas: bool = False
+) -> Array:
+    """Training/prefill. x: (B, S, E) → (B, S, E)."""
+    mc = cfg.mamba
+    B, S, E = x.shape
+    di = mc.d_inner(E)
+    H, P, G, N = mc.num_heads(E), mc.head_dim, mc.n_groups, mc.d_state
+
+    z, xs, Bm, C, dt = _project(params, x, cfg)
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, params["conv_B"]))
+    C = jax.nn.silu(_causal_conv(C, params["conv_C"]))
+
+    xh = xs.reshape(B, S, H, P)
+    Bh = Bm.reshape(B, S, G, N)
+    Ch = C.reshape(B, S, G, N)
+    A = -jnp.exp(params["A_log"])  # (H,) < 0
+
+    from repro.kernels.ssd import ops as ssd_ops
+    from repro.kernels.ssd import ref as ssd_ref
+
+    if use_pallas:
+        y = ssd_ops.ssd_scan(xh, dt, A, Bh, Ch)
+    else:
+        # chunked jnp SSD: parallel over chunks + log-depth cross-chunk
+        # scan — the production non-Pallas path (identical math).
+        y = ssd_ref.ssd_chunked(xh, dt, A, Bh, Ch)
+
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(x.dtype)  # D is fp32; restore compute dtype
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    return y @ params["out"]
+
+
+def mamba_decode(
+    params: dict, x: Array, cfg: ModelConfig, state: MambaState
+) -> Tuple[Array, MambaState]:
+    """Single-token decode. x: (B, 1, E) → ((B, 1, E), state')."""
+    mc = cfg.mamba
+    B, _, E = x.shape
+    di = mc.d_inner(E)
+    H, P, G, N = mc.num_heads(E), mc.head_dim, mc.n_groups, mc.d_state
+
+    z, xs, Bm, C, dt = _project(params, x[:, 0, :], cfg)
+    ch = jnp.concatenate([xs, Bm, C], axis=-1)  # (B, di + 2GN)
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_B"], params["conv_C"]], axis=1
+    )
+    conv_state, conv_out = _conv_step(state.conv, ch, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, C = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+    xh = xs.reshape(B, H, P)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(C.reshape(B, G, N), H // G, axis=1)
+    A = -jnp.exp(params["A_log"])
+
+    a = jnp.exp(dt * A)  # (B, H)
+    ssm = state.ssm * a[..., None, None] + (
+        (dt * 1.0)[..., None, None]
+        * Bh[..., :, None].astype(jnp.float32)
+        * xh[..., None, :].astype(jnp.float32)
+    )  # (B, H, N, P)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), ssm)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = (y @ params["out"])[:, None, :]
+    return out, MambaState(conv=conv_state, ssm=ssm)
+
+
+def init_mamba_decode_state(cfg: ModelConfig, batch: int) -> MambaState:
+    mc = cfg.mamba
+    E = cfg.d_model
+    di = mc.d_inner(E)
+    H, N, P = mc.num_heads(E), mc.d_state, mc.head_dim
+    channels = di + 2 * mc.n_groups * N
+    from repro.models.kvcache import init_mamba_state
+
+    return init_mamba_state(
+        batch, mc.conv_width, channels, H, N, P, jnp.dtype(cfg.dtype)
+    )

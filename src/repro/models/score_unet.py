@@ -1,0 +1,185 @@
+"""Score networks in the paper's own family: a compact NCSN++-style UNet
+for images, and an MLP score net for low-dimensional benchmark problems.
+
+The UNet keeps the structural ingredients of NCSN++ (time conditioning
+through every residual block, down/up path with skip connections, GroupNorm
++ SiLU) at a scale trainable on CPU for the end-to-end examples. The
+output is the noise prediction; ``make_score_fn`` rescales by −1/std(t),
+matching the training loss in ``repro.core.losses``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, timestep_embedding
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# MLP score net (toy distributions; exact-solver validation)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPScoreConfig:
+    dim: int = 2
+    hidden: int = 128
+    depth: int = 3
+    t_dim: int = 64
+
+
+def init_mlp_score(cfg: MLPScoreConfig, key: Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.depth + 2)
+    sizes = [cfg.dim + cfg.t_dim] + [cfg.hidden] * cfg.depth + [cfg.dim]
+    layers = []
+    for i in range(len(sizes) - 1):
+        layers.append({
+            "w": dense_init(ks[i], (sizes[i], sizes[i + 1]), jnp.float32),
+            "b": jnp.zeros((sizes[i + 1],), jnp.float32),
+        })
+    # zero-init last layer: initial score ≈ 0 (pure prior).
+    layers[-1]["w"] = jnp.zeros_like(layers[-1]["w"])
+    return {"layers": layers}
+
+
+def mlp_score_forward(params, x: Array, t: Array, cfg: MLPScoreConfig) -> Array:
+    temb = timestep_embedding(t, cfg.t_dim)
+    h = jnp.concatenate([x, temb], axis=-1)
+    for i, lp in enumerate(params["layers"]):
+        h = h @ lp["w"] + lp["b"]
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.silu(h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# UNet score net (images)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    image_size: int = 32
+    channels: int = 3
+    base: int = 32           # base feature width
+    mults: tuple = (1, 2, 2)  # per-resolution channel multipliers
+    t_dim: int = 128
+    groups: int = 8
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan = kh * kw * cin
+    return (jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout), jnp.float32)
+            * fan ** -0.5).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _groupnorm(x: Array, scale: Array, bias: Array, groups: int) -> Array:
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (xg.reshape(B, H, W, C) * scale + bias).astype(x.dtype)
+
+
+def _init_resblock(key, cin, cout, t_dim):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "gn1_s": jnp.ones((cin,)), "gn1_b": jnp.zeros((cin,)),
+        "conv1": _conv_init(k1, 3, 3, cin, cout),
+        "temb_w": dense_init(k2, (t_dim, cout), jnp.float32),
+        "temb_b": jnp.zeros((cout,)),
+        "gn2_s": jnp.ones((cout,)), "gn2_b": jnp.zeros((cout,)),
+        "conv2": jnp.zeros((3, 3, cout, cout)),  # zero-init second conv
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def _resblock(p, x, temb, groups):
+    h = jax.nn.silu(_groupnorm(x, p["gn1_s"], p["gn1_b"], groups))
+    h = _conv(h, p["conv1"])
+    h = h + (jax.nn.silu(temb) @ p["temb_w"] + p["temb_b"])[:, None, None, :]
+    h = jax.nn.silu(_groupnorm(h, p["gn2_s"], p["gn2_b"], groups))
+    h = _conv(h, p["conv2"])
+    skip = _conv(x, p["skip"]) if "skip" in p else x
+    return skip + h
+
+
+def init_unet(cfg: UNetConfig, key: Array) -> Dict[str, Any]:
+    ks = iter(jax.random.split(key, 64))
+    widths = [cfg.base * m for m in cfg.mults]
+    p: Dict[str, Any] = {
+        "t_w1": dense_init(next(ks), (cfg.t_dim, cfg.t_dim), jnp.float32),
+        "t_w2": dense_init(next(ks), (cfg.t_dim, cfg.t_dim), jnp.float32),
+        "conv_in": _conv_init(next(ks), 3, 3, cfg.channels, widths[0]),
+    }
+    cin = widths[0]
+    downs = []
+    for w in widths:
+        downs.append({
+            "res": _init_resblock(next(ks), cin, w, cfg.t_dim),
+            "down": _conv_init(next(ks), 3, 3, w, w),
+        })
+        cin = w
+    p["downs"] = downs
+    p["mid1"] = _init_resblock(next(ks), cin, cin, cfg.t_dim)
+    p["mid2"] = _init_resblock(next(ks), cin, cin, cfg.t_dim)
+    ups = []
+    for w in reversed(widths):
+        ups.append({
+            "up": _conv_init(next(ks), 3, 3, cin, w),
+            "res": _init_resblock(next(ks), 2 * w, w, cfg.t_dim),
+        })
+        cin = w
+    p["ups"] = ups
+    p["gn_out_s"] = jnp.ones((cin,))
+    p["gn_out_b"] = jnp.zeros((cin,))
+    p["conv_out"] = jnp.zeros((3, 3, cin, cfg.channels))
+    return p
+
+
+def unet_forward(params, x: Array, t: Array, cfg: UNetConfig) -> Array:
+    temb = timestep_embedding(t, cfg.t_dim)
+    temb = jax.nn.silu(temb @ params["t_w1"]) @ params["t_w2"]
+
+    h = _conv(x, params["conv_in"])
+    skips = []
+    for d in params["downs"]:
+        h = _resblock(d["res"], h, temb, cfg.groups)
+        skips.append(h)
+        h = _conv(h, d["down"], stride=2)
+    h = _resblock(params["mid1"], h, temb, cfg.groups)
+    h = _resblock(params["mid2"], h, temb, cfg.groups)
+    for u in params["ups"]:
+        B, H, W, C = h.shape
+        h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+        h = _conv(h, u["up"])
+        h = jnp.concatenate([h, skips.pop()], axis=-1)
+        h = _resblock(u["res"], h, temb, cfg.groups)
+    h = jax.nn.silu(_groupnorm(h, params["gn_out_s"], params["gn_out_b"], cfg.groups))
+    return _conv(h, params["conv_out"])
+
+
+def make_score_fn(forward_fn, params, cfg, sde):
+    """Noise-prediction net → score: s(x,t) = −net(x,t)/std(t)."""
+
+    def score(x: Array, t: Array) -> Array:
+        _, std = sde.marginal(t)
+        return -forward_fn(params, x, t, cfg) / std.reshape(
+            (-1,) + (1,) * (x.ndim - 1)
+        )
+
+    return score

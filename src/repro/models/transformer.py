@@ -1,0 +1,292 @@
+"""Decoder assembly: embeds → scanned super-blocks → norm → LM head.
+
+The layer stack is grouped into ``num_repeats`` identical super-blocks
+(one period of the config's mixer/mlp pattern). Weights are stacked on a
+leading repeat axis and the stack is a single ``lax.scan``, so HLO size
+is O(pattern) not O(depth). Non-uniform stacks (jamba 7:1 mamba:attn,
+gemma3 5:1 local:global, VLM every-5th cross-attn) are uniform at the
+super-block level by construction.
+
+Decode threads per-layer recurrent state (KV caches / SSM states),
+stacked the same way, through the same scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attention_decode, attention_forward, init_attention
+from repro.models.config import ModelConfig
+from repro.models.kvcache import LayerKVCache, init_kv_cache
+from repro.models.layers import apply_mlp, apply_norm, dense_init, init_mlp, init_norm
+from repro.models.mamba2 import (
+    init_mamba,
+    init_mamba_decode_state,
+    mamba_decode,
+    mamba_forward,
+)
+from repro.models.moe import apply_moe, init_moe
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_block_position(key: Array, cfg: ModelConfig, pos: int) -> Params:
+    mix, mlp = cfg.mixer_pattern[pos], cfg.mlp_pattern[pos]
+    kmix, kmlp, kn = jax.random.split(key, 3)
+    dtype = jnp.dtype(cfg.dtype)
+    p: Params = {"norm1": init_norm(kn, cfg.d_model, cfg.norm_type, dtype)}
+    if mix in ("A", "L", "X"):
+        p["mixer"] = init_attention(kmix, cfg, mix)
+    elif mix == "M":
+        p["mixer"] = init_mamba(kmix, cfg)
+    else:
+        raise ValueError(mix)
+    if mlp != "N":
+        p["norm2"] = init_norm(kn, cfg.d_model, cfg.norm_type, dtype)
+        if mlp == "D":
+            p["mlp"] = init_mlp(kmlp, cfg.d_model, cfg.d_ff, cfg.glu, dtype)
+        elif mlp == "E":
+            p["mlp"] = init_moe(kmlp, cfg)
+        else:
+            raise ValueError(mlp)
+    return p
+
+
+def init_model(cfg: ModelConfig, key: Array) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4 + len(cfg.mixer_pattern))
+    R = cfg.num_repeats
+
+    if cfg.num_codebooks > 1:
+        embed = dense_init(
+            ks[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model), dtype,
+            fan_in=cfg.d_model,
+        )
+    else:
+        embed = dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype,
+                           fan_in=cfg.d_model)
+
+    blocks = []
+    for pos in range(len(cfg.mixer_pattern)):
+        kp = jax.random.split(ks[2 + pos], R)
+        stacked = jax.vmap(lambda k: _init_block_position(k, cfg, pos))(kp)
+        blocks.append(stacked)
+
+    params: Params = {
+        "embed": embed,
+        "blocks": {f"p{i}": b for i, b in enumerate(blocks)},
+        "final_norm": init_norm(ks[1], cfg.d_model, cfg.norm_type, dtype),
+    }
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            params["lm_head"] = dense_init(
+                ks[-1], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size), dtype
+            )
+        else:
+            params["lm_head"] = dense_init(
+                ks[-1], (cfg.d_model, cfg.vocab_size), dtype
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+def embed_tokens(params: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    if cfg.num_codebooks > 1:
+        # tokens (B, S, K): sum of per-codebook embeddings (MusicGen).
+        parts = [
+            jnp.take(params["embed"][k], tokens[..., k], axis=0)
+            for k in range(cfg.num_codebooks)
+        ]
+        return functools.reduce(jnp.add, parts)
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def lm_logits(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        if cfg.num_codebooks > 1:
+            return jnp.einsum("bse,kve->bskv", x, params["embed"])
+        return jnp.einsum("bse,ve->bsv", x, params["embed"])
+    if cfg.num_codebooks > 1:
+        return jnp.einsum("bse,kev->bskv", x, params["lm_head"])
+    return jnp.einsum("bse,ev->bsv", x, params["lm_head"])
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _block_forward(
+    bp: Params,
+    x: Array,
+    aux: Array,
+    cfg: ModelConfig,
+    pos_idx: int,
+    positions: Array,
+    cross_embeds: Optional[Array],
+    use_flash: bool,
+    use_pallas_ssd: bool,
+) -> Tuple[Array, Array]:
+    mix, mlp = cfg.mixer_pattern[pos_idx], cfg.mlp_pattern[pos_idx]
+    h = apply_norm(bp["norm1"], x, cfg.norm_type)
+    if mix == "M":
+        y = mamba_forward(bp["mixer"], h, cfg, use_pallas=use_pallas_ssd)
+    else:
+        y = attention_forward(
+            bp["mixer"], h, cfg, mix, positions,
+            cross_kv=cross_embeds if mix == "X" else None,
+            use_flash=use_flash,
+        )
+    x = x + y
+    if mlp != "N":
+        h = apply_norm(bp["norm2"], x, cfg.norm_type)
+        if mlp == "D":
+            y = apply_mlp(bp["mlp"], h, cfg.act, cfg.glu)
+        else:
+            y, a = apply_moe(bp["mlp"], h, cfg, dispatch=cfg.moe_dispatch)
+            aux = aux + a
+        x = x + y
+    if cfg.residual_seq_shard:
+        from jax.sharding import PartitionSpec as P
+
+        U = P.UNCONSTRAINED
+        x = jax.lax.with_sharding_constraint(
+            x, P(U, cfg.residual_seq_shard, U)
+        )
+    return x, aux
+
+
+def forward(
+    params: Params,
+    tokens: Array,
+    cfg: ModelConfig,
+    *,
+    cross_embeds: Optional[Array] = None,
+    use_flash: bool = False,
+    use_pallas_ssd: bool = False,
+    remat: str = "none",  # none | full | dots
+    unroll: bool = False,  # unroll the repeat scan (dry-run: exact HLO flops)
+    last_logits_only: bool = False,  # prefill: head only on the final position
+) -> Tuple[Array, Array]:
+    """tokens (B, S[, K]) → (logits, moe_aux_loss)."""
+    x = embed_tokens(params, tokens, cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def superblock(carry, bparams):
+        x, aux = carry
+        for i in range(len(cfg.mixer_pattern)):
+            x, aux = _block_forward(
+                bparams[f"p{i}"], x, aux, cfg, i, positions,
+                cross_embeds, use_flash, use_pallas_ssd,
+            )
+        return (x, aux), None
+
+    if remat == "full":
+        superblock = jax.checkpoint(superblock)
+    elif remat == "dots":
+        superblock = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    elif remat != "none":
+        raise ValueError(remat)
+
+    (x, aux), _ = jax.lax.scan(
+        superblock,
+        (x, jnp.zeros((), jnp.float32)),
+        params["blocks"],
+        unroll=cfg.num_repeats if unroll else 1,
+    )
+    if last_logits_only:
+        # Serving prefill needs only the next-token logits: slicing BEFORE
+        # the head avoids a (B, S, V) matmul of dead compute — for a 32k
+        # prefill with a 49k vocab that dead matmul is ~20× the rest of
+        # the model (§Perf, granite hillclimb).
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    return lm_logits(params, x, cfg), aux
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    """Per-pattern-position recurrent state, stacked over repeats."""
+    R = cfg.num_repeats
+    dtype = jnp.dtype(cfg.dtype)
+    state: Dict[str, Any] = {}
+    for i, mix in enumerate(cfg.mixer_pattern):
+        if mix in ("A", "L"):
+            # Sliding-window layers only need a window-sized ring buffer.
+            eff = cache_len if mix == "A" else min(cache_len, cfg.sliding_window)
+            one = init_kv_cache(batch, eff, cfg.num_kv_heads, cfg.head_dim, dtype)
+        elif mix == "M":
+            one = init_mamba_decode_state(cfg, batch)
+        else:  # "X" — stateless (image KV recomputed)
+            state[f"p{i}"] = {}
+            continue
+        state[f"p{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (R,) + a.shape), one
+        )
+    return state
+
+
+def decode_step(
+    params: Params,
+    tokens: Array,
+    state: Dict[str, Any],
+    cfg: ModelConfig,
+    *,
+    cross_embeds: Optional[Array] = None,
+    start_pos: Optional[Array] = None,  # (B,) continuous-batching isolation
+    unroll: bool = False,
+) -> Tuple[Array, Dict[str, Any]]:
+    """One decode step. tokens (B, 1[, K]) → (logits (B, 1[, K], V), state')."""
+    x = embed_tokens(params, tokens, cfg)
+
+    def superblock(x, inputs):
+        bparams, st = inputs
+        new_st = {}
+        for i, (mix, mlp) in enumerate(zip(cfg.mixer_pattern, cfg.mlp_pattern)):
+            bp = bparams[f"p{i}"]
+            h = apply_norm(bp["norm1"], x, cfg.norm_type)
+            if mix == "M":
+                y, s_new = mamba_decode(bp["mixer"], h, cfg, st[f"p{i}"])
+            elif mix == "X":
+                y, _ = attention_decode(
+                    bp["mixer"], h, cfg, mix, None, cross_kv=cross_embeds
+                )
+                s_new = {}
+            else:
+                y, s_new = attention_decode(bp["mixer"], h, cfg, mix,
+                                            st[f"p{i}"], start_pos=start_pos)
+            new_st[f"p{i}"] = s_new
+            x = x + y
+            if mlp != "N":
+                h = apply_norm(bp["norm2"], x, cfg.norm_type)
+                if mlp == "D":
+                    y = apply_mlp(bp["mlp"], h, cfg.act, cfg.glu)
+                else:
+                    y, _ = apply_moe(bp["mlp"], h, cfg, dispatch=cfg.moe_dispatch)
+                x = x + y
+        return x, new_st
+
+    x, new_state = jax.lax.scan(
+        superblock, x, (params["blocks"], state),
+        unroll=cfg.num_repeats if unroll else 1,
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm_type)
+    return lm_logits(params, x, cfg), new_state

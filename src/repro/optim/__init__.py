@@ -1,0 +1,9 @@
+from .adamw import AdamW, AdamWState, global_norm
+from .ema import ema_init, ema_params, ema_update
+from .schedules import constant, warmup_cosine, warmup_linear
+
+__all__ = [
+    "AdamW", "AdamWState", "global_norm",
+    "ema_init", "ema_params", "ema_update",
+    "constant", "warmup_cosine", "warmup_linear",
+]

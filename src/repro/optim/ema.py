@@ -1,0 +1,22 @@
+"""Exponential moving average of parameters — required by diffusion
+training (the paper samples from the EMA weights of the score net)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ema_init(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema, params, decay: float = 0.999):
+    return jax.tree.map(
+        lambda e, p: decay * e + (1.0 - decay) * p.astype(jnp.float32), ema, params
+    )
+
+
+def ema_params(ema, like):
+    """Cast the fp32 EMA back to the training dtype structure."""
+    return jax.tree.map(lambda e, p: e.astype(p.dtype), ema, like)

@@ -1,0 +1,13 @@
+from .sharding import (
+    MODEL_AXIS,
+    batch_sharding,
+    data_axes,
+    kv_cache_sharding,
+    param_shardings,
+    replicated,
+)
+
+__all__ = [
+    "MODEL_AXIS", "batch_sharding", "data_axes", "kv_cache_sharding",
+    "param_shardings", "replicated",
+]

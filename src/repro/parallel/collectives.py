@@ -1,0 +1,132 @@
+"""shard_map collectives: distributed flash-decode attention (§Perf).
+
+When GQA kv-heads don't divide the model axis, decode caches shard over
+the *sequence* (sharding.kv_cache_spec). Plain GSPMD then all-gathers
+the whole KV per token (measured 37.9 GiB/step for gemma3 decode_32k).
+This module does what GSPMD can't derive: each shard writes its slice of
+the cache locally, computes a *partial* softmax over its keys, and the
+shards combine with O(B·H·Dh) psums — flash-decode across chips.
+
+Exact: the combine uses the standard online-softmax correction
+(global max → rescale partial sums), identical numerics to full-cache
+attention (validated in tests against the jnp reference).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+def _local_write_and_attend(
+    q, k_new, v_new, ck, cv, pos_l, length,
+    *, axis, window: Optional[int], softcap: float, group: int,
+):
+    """Per-shard body. ck/cv (B, Scl, Kv, Dh); pos_l (Scl,); q (B,1,H,Dh).
+    ``axis`` is a tuple of mesh axis names the sequence dim shards over
+    (major-to-minor, matching PartitionSpec tuple semantics)."""
+    B, Scl, Kv, Dh = ck.shape
+    n = 1
+    my_index = jnp.zeros((), jnp.int32)
+    for a in axis:
+        sz = jax.lax.axis_size(a)
+        my_index = my_index * sz + jax.lax.axis_index(a).astype(jnp.int32)
+        n = n * sz
+    Sc = Scl * n
+    slot = (length % Sc).astype(jnp.int32)
+    my_start = my_index * Scl
+    local_slot = jnp.clip(slot - my_start, 0, Scl - 1)
+    owns = jnp.logical_and(slot >= my_start, slot < my_start + Scl)
+
+    ck_w = jax.lax.dynamic_update_slice(ck, k_new, (0, local_slot, 0, 0))
+    cv_w = jax.lax.dynamic_update_slice(cv, v_new, (0, local_slot, 0, 0))
+    pos_w = jax.lax.dynamic_update_slice(
+        pos_l, length[None].astype(jnp.int32), (local_slot,)
+    )
+    ck = jnp.where(owns, ck_w, ck)
+    cv = jnp.where(owns, cv_w, cv)
+    pos_l = jnp.where(owns, pos_w, pos_l)
+
+    # visibility of local slots to the (just-written) current token
+    cur = length  # position of the new token
+    valid = jnp.logical_and(pos_l >= 0, pos_l <= cur)
+    if window is not None:
+        valid = jnp.logical_and(valid, pos_l > cur - window)
+
+    kk = jnp.repeat(ck, group, axis=2)  # (B, Scl, H, Dh)
+    vv = jnp.repeat(cv, group, axis=2)
+    logits = jnp.einsum(
+        "bshd,bthd->bhst", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * (Dh ** -0.5)  # (B, H, 1, Scl)
+    if softcap and softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+
+    m_loc = jnp.max(logits, axis=-1)  # (B, H, 1)
+    p = jnp.exp(logits - m_loc[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    s_loc = jnp.sum(p, axis=-1)  # (B, H, 1)
+    o_loc = jnp.einsum("bhst,bthd->bshd", p, vv.astype(jnp.float32))  # (B,1,H,Dh)
+
+    # cross-shard online-softmax combine: O(B·H·Dh) traffic
+    m_glob = jax.lax.pmax(m_loc, axis)  # axis tuple OK
+    corr = jnp.exp(m_loc - m_glob)  # (B, H, 1)
+    s_glob = jax.lax.psum(s_loc * corr, axis)
+    o = jax.lax.psum(o_loc * corr.transpose(0, 2, 1)[..., None], axis)
+    o = o / jnp.maximum(s_glob, 1e-30).transpose(0, 2, 1)[..., None]
+    return o.astype(q.dtype), ck, cv, pos_l
+
+
+def flash_decode(
+    q: Array,        # (B, 1, H, Dh)
+    k_new: Array,    # (B, 1, Kv, Dh)
+    v_new: Array,    # (B, 1, Kv, Dh)
+    cache_k: Array,  # (B, Sc, Kv, Dh) — seq dim sharded over `axis`
+    cache_v: Array,
+    pos: Array,      # (Sc,) absolute positions, −1 empty
+    length: Array,   # () tokens seen before this one
+    *,
+    axis="model",  # mesh axis name, or comma-joined / tuple of names
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+) -> Tuple[Array, Array, Array, Array]:
+    """Write one token and attend, with the cache sequence-sharded over
+    ``axis``. Returns (out (B,1,H,Dh), cache_k', cache_v', pos')."""
+    if isinstance(axis, str):
+        axis = tuple(axis.split(","))
+    else:
+        axis = tuple(axis)
+    group = q.shape[2] // cache_k.shape[2]
+    body = functools.partial(
+        _local_write_and_attend,
+        axis=axis, window=window, softcap=softcap, group=group,
+    )
+    # Resolve the ambient mesh: the launchers use the legacy `with mesh:`
+    # context, which jax.shard_map's context-mesh lookup doesn't see.
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        from jax._src import mesh as _mesh_lib
+
+        phys = _mesh_lib.thread_resources.env.physical_mesh
+        mesh = phys if not phys.empty else None
+    fn = jax.shard_map(
+        body,
+        in_specs=(
+            P(), P(), P(),                       # q, k_new, v_new replicated over axis
+            P(None, axis, None, None),           # cache_k
+            P(None, axis, None, None),           # cache_v
+            P(axis),                             # pos
+            P(),                                 # length
+        ),
+        out_specs=(P(), P(None, axis, None, None),
+                   P(None, axis, None, None), P(axis)),
+        axis_names=set(axis),
+        mesh=mesh,
+    )
+    return fn(q, k_new, v_new, cache_k, cache_v, pos, length)

@@ -1,0 +1,127 @@
+"""Continuous-batching diffusion sampling server.
+
+The paper's per-sample step sizes (Sec. 3.1.5) mean each sample in a
+batch finishes its reverse diffusion at its own NFE. In a serving
+context that is exactly the continuous-batching opportunity: run a fixed
+slot batch of Algorithm-1 state, and whenever a slot's t reaches t_eps,
+deliver the image and refill the slot with a fresh prior draw for the
+next request — no request ever waits for the batch's slowest sample.
+
+Throughput math: naive batched sampling costs max_i NFE_i per batch of
+requests; slot refill costs ~mean_i NFE_i — the gap grows with the
+per-sample NFE spread the paper's adaptivity creates.
+
+Device step = repro.launch.sample.make_sample_step (the same unit the
+production-mesh dry-run lowers); the host loop only watches t and swaps
+slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AdaptiveConfig
+from repro.core.sde import SDE
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    uid: int
+    seed: int
+    result: Optional[np.ndarray] = None
+    nfe: int = 0
+    done: bool = False
+
+
+class DiffusionBatcher:
+    """Slot-refilling sampler around a pjit-able Algorithm-1 step."""
+
+    def __init__(
+        self,
+        sde: SDE,
+        sample_step: Callable,  # (params, state) -> state (from make_sample_step)
+        params,
+        sample_shape,           # per-sample shape, e.g. (16, 16, 3)
+        *,
+        slots: int = 8,
+        cfg: AdaptiveConfig | None = None,
+    ):
+        self.sde = sde
+        self.cfg = cfg or AdaptiveConfig()
+        self.params = params
+        self.n = slots
+        self.shape = tuple(sample_shape)
+        self.step_fn = jax.jit(sample_step)
+        self.queue: Deque[ImageRequest] = deque()
+        self.finished: Dict[int, ImageRequest] = {}
+        self._slot_req: List[Optional[ImageRequest]] = [None] * slots
+        B = slots
+        self._state = (
+            jnp.zeros((B,) + self.shape, jnp.float32),   # x
+            jnp.zeros((B,) + self.shape, jnp.float32),   # x_prev
+            jnp.zeros((B,), jnp.float32),                # t (0 = idle)
+            jnp.full((B,), self.cfg.h_init, jnp.float32),
+            jax.random.PRNGKey(0),
+        )
+
+    def submit(self, req: ImageRequest) -> None:
+        self.queue.append(req)
+
+    def _refill(self) -> None:
+        x, xp, t, h, key = self._state
+        tn = np.asarray(t)
+        changed = False
+        x_host = None
+        for i in range(self.n):
+            if self._slot_req[i] is not None and tn[i] <= self.sde.t_eps + 1e-9:
+                # deliver (final Tweedie denoise is a host-side epilogue
+                # amortized per delivery — one extra NFE, as in the paper)
+                if x_host is None:
+                    x_host = np.asarray(x)
+                req = self._slot_req[i]
+                req.result = x_host[i]
+                req.done = True
+                self.finished[req.uid] = req
+                self._slot_req[i] = None
+            if self._slot_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                self._slot_req[i] = req
+                k = jax.random.PRNGKey(req.seed)
+                x = x.at[i].set(
+                    self.sde.prior_sample(k, self.shape).astype(x.dtype))
+                xp = xp.at[i].set(x[i])
+                t = t.at[i].set(self.sde.T)
+                h = h.at[i].set(min(self.cfg.h_init,
+                                    self.sde.T - self.sde.t_eps))
+                changed = True
+        if changed or x_host is not None:
+            self._state = (x, xp, t, h, key)
+
+    def step(self) -> int:
+        """One device step; returns number of busy slots."""
+        self._refill()
+        busy = sum(1 for r in self._slot_req if r is not None)
+        if busy == 0:
+            return 0
+        self._state = self.step_fn(self.params, self._state)
+        for i, r in enumerate(self._slot_req):
+            if r is not None:
+                r.nfe += 2
+        return busy
+
+    def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, ImageRequest]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self._slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        self._refill()  # deliver stragglers
+        return self.finished

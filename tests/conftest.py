@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the single real CPU device — the 512
+# placeholder devices are requested by dryrun.py only (in subprocesses).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,79 @@
+"""Diffusion-LM: the zoo backbone as a score network + the paper's
+solver generating token sequences end to end."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import VPSDE
+from repro.models.diffusion_lm import (
+    DiffusionLMConfig, diffusion_lm_forward, diffusion_lm_loss, embed,
+    generate, init_diffusion_lm, round_to_tokens,
+)
+from repro.optim import AdamW
+
+
+@pytest.fixture(scope="module")
+def setup():
+    bb = get_config("qwen1.5-0.5b").scaled_down().replace(vocab_size=64)
+    cfg = DiffusionLMConfig(backbone=bb, embed_dim=32)
+    sde = VPSDE()
+    key = jax.random.PRNGKey(0)
+    params = init_diffusion_lm(cfg, key)
+    return cfg, sde, params
+
+
+def test_forward_shape_and_finite(setup, rng):
+    cfg, sde, params = setup
+    x = jax.random.normal(rng, (2, 12, cfg.embed_dim))
+    t = jnp.linspace(0.1, 0.9, 2)
+    out = diffusion_lm_forward(params, x, t, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_rounding_inverts_embedding(setup, rng):
+    cfg, sde, params = setup
+    toks = jax.random.randint(rng, (2, 16), 0, cfg.backbone.vocab_size)
+    x0 = embed(params, toks)
+    # exact embeddings round back to the same tokens (unit-norm geometry)
+    assert bool(jnp.all(round_to_tokens(params, x0) == toks))
+
+
+def test_generation_runs_with_adaptive_solver(setup, rng):
+    cfg, sde, params = setup
+    toks, res = generate(params, cfg, sde, batch=4, seq=8, key=rng,
+                         method="adaptive", eps_rel=0.1)
+    assert toks.shape == (4, 8)
+    assert int(toks.min()) >= 0 and int(toks.max()) < cfg.backbone.vocab_size
+    assert float(res.mean_nfe) > 0
+
+
+def test_training_reduces_loss(setup, rng):
+    """Short DSM training on a 2-token repeating language must reduce
+    loss (the embedding geometry is learnable-free; only the net moves)."""
+    cfg, sde, params = setup
+    opt = AdamW(lr=2e-3, weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def data(key):
+        a = jax.random.randint(key, (8, 1), 0, 2) * 3  # tokens 0 or 3
+        return jnp.tile(a, (1, 12))
+
+    @jax.jit
+    def step(params, opt_state, key):
+        key, kd, kl = jax.random.split(key, 3)
+        loss, grads = jax.value_and_grad(
+            lambda p: diffusion_lm_loss(p, cfg, sde, data(kd), kl)
+        )(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, key, loss
+
+    key = rng
+    first = None
+    for i in range(60):
+        params, opt_state, key, loss = step(params, opt_state, key)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.9, (first, float(loss))

@@ -1,0 +1,79 @@
+"""Diffusion continuous batching: every request completes, samples land
+on the data distribution, and slot refill beats lockstep batching in
+device steps when per-sample NFE varies."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdaptiveConfig, VPSDE
+from repro.launch.sample import make_sample_step
+from repro.models.dit import DiTConfig
+from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+MU, S0 = 0.3, 0.5
+D = 32
+
+
+@pytest.fixture(scope="module")
+def server_parts():
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+
+    # analytic Gaussian score stands in for the net: make_sample_step only
+    # needs a forward_fn(params, x, t) — adapt signature.
+    def forward_fn(params, x, t):
+        m, std = sde.marginal(t)
+        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
+        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
+        score = -(x - m * MU) / (m * m * S0 * S0 + std * std)
+        # make_sample_step treats forward_fn as noise-pred: score = -out/std
+        return -score * std
+
+    net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
+                    num_heads=1, d_ff=8)  # unused shapes; signature holder
+    step = make_sample_step(net, sde, cfg, forward_fn=forward_fn)
+    return sde, cfg, step
+
+
+def test_all_requests_complete_and_distribute(server_parts):
+    sde, cfg, step = server_parts
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,), slots=4,
+                         cfg=cfg)
+    n_req = 12
+    for uid in range(n_req):
+        b.submit(ImageRequest(uid=uid, seed=uid))
+    done = b.run_to_completion()
+    assert len(done) == n_req
+    xs = np.stack([done[u].result for u in range(n_req)])
+    assert np.isfinite(xs).all()
+    # pooled moments approach the data distribution (pre-denoise state)
+    assert abs(xs.mean() - MU) < 0.12
+    assert abs(xs.std() - S0) < 0.12
+    # every request did real work
+    assert min(done[u].nfe for u in range(n_req)) > 10
+
+
+def test_refill_uses_fewer_steps_than_lockstep(server_parts):
+    """Slot refill: total device steps < (batches × slowest sample) that
+    lockstep batching would pay."""
+    sde, cfg, step = server_parts
+    n_req, slots = 16, 4
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=slots, cfg=cfg)
+    for uid in range(n_req):
+        b.submit(ImageRequest(uid=uid, seed=100 + uid))
+    steps = 0
+    while b.queue or any(r is not None for r in b._slot_req):
+        if b.step() == 0:
+            break
+        steps += 1
+    b._refill()
+    assert len(b.finished) == n_req
+    per_req_iters = [b.finished[u].nfe // 2 for u in range(n_req)]
+    # lockstep: ceil(n/slots) batches, each paying its max
+    groups = [per_req_iters[i:i + slots]
+              for i in range(0, n_req, slots)]
+    lockstep_steps = sum(max(g) for g in groups)
+    assert steps <= lockstep_steps

@@ -1,0 +1,48 @@
+"""Integration: the real dry-run (512 placeholder devices) in a
+subprocess, one representative combo per step kind. The full 10×4×2
+matrix runs via ``python -m repro.launch.dryrun --all`` and is recorded
+in EXPERIMENTS.md §Dry-run.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, multi_pod=False):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=560, cwd=ROOT)
+
+
+@pytest.mark.slow
+def test_dryrun_train_single_pod():
+    r = _run("qwen1.5-0.5b", "train_4k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    path = os.path.join(ROOT, "experiments", "dryrun",
+                        "qwen1.5-0.5b_train_4k_1pod.json")
+    rec = json.load(open(path))
+    assert rec["devices"] == 256
+    assert rec["cost"]["flops"] > 1e11
+    assert rec["collectives"]["total_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi_pod():
+    r = _run("qwen1.5-0.5b", "decode_32k", multi_pod=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    path = os.path.join(ROOT, "experiments", "dryrun",
+                        "qwen1.5-0.5b_decode_32k_2pod.json")
+    rec = json.load(open(path))
+    assert rec["devices"] == 512

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the solver's numeric invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tolerance import (
+    mixed_tolerance,
+    next_step_size,
+    scaled_error_l2,
+    scaled_error_linf,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+finite = st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False)
+pos = st.floats(1e-6, 10.0, allow_nan=False, allow_infinity=False)
+
+
+@given(
+    st.lists(finite, min_size=2, max_size=16),
+    st.lists(finite, min_size=2, max_size=16),
+    pos, pos,
+)
+def test_mixed_tolerance_bounds(xs, xp, eps_abs, eps_rel):
+    n = min(len(xs), len(xp))
+    x = jnp.asarray(xs[:n])[None, :]
+    p = jnp.asarray(xp[:n])[None, :]
+    d = mixed_tolerance(x, p, eps_abs, eps_rel)
+    # δ ≥ ε_abs everywhere, and δ ≥ ε_rel·|x'| (element-wise lower bounds)
+    assert bool(jnp.all(d >= eps_abs - 1e-7))
+    assert bool(jnp.all(d >= eps_rel * jnp.abs(x) - 1e-5))
+    # monotonicity: dropping the prev term can only shrink δ
+    d_noprev = mixed_tolerance(x, None, eps_abs, eps_rel)
+    assert bool(jnp.all(d + 1e-7 >= d_noprev))
+
+
+@given(
+    st.lists(finite, min_size=4, max_size=32),
+    st.lists(finite, min_size=4, max_size=32),
+    pos,
+)
+def test_l2_error_bounded_by_linf(xs, ys, eps_abs):
+    n = min(len(xs), len(ys))
+    x = jnp.asarray(xs[:n])[None, :]
+    y = jnp.asarray(ys[:n])[None, :]
+    d = mixed_tolerance(x, None, eps_abs, 0.05)
+    e2 = scaled_error_l2(x, y, d)
+    einf = scaled_error_linf(x, y, d)
+    # RMS ≤ max: the paper's ℓ2 norm is never more conservative than ℓ∞
+    assert float(e2[0]) <= float(einf[0]) + 1e-5
+    # zero error ⇔ identical proposals
+    z = scaled_error_l2(x, x, d)
+    assert float(z[0]) == 0.0
+
+
+@given(pos, st.floats(1e-3, 50.0), pos,
+       st.floats(0.5, 1.0), st.floats(0.1, 0.99))
+def test_next_step_size_invariants(h, err, remaining, r_exp, safety):
+    h_new = next_step_size(
+        jnp.asarray(h), jnp.asarray(err), jnp.asarray(remaining),
+        safety=safety, r_exponent=r_exp,
+    )
+    # never exceeds the remaining time
+    assert float(h_new) <= remaining + 1e-6
+    # larger error ⇒ smaller proposed step (monotone in err)
+    h2 = next_step_size(
+        jnp.asarray(h), jnp.asarray(err * 2.0), jnp.asarray(remaining),
+        safety=safety, r_exponent=r_exp,
+    )
+    assert float(h2) <= float(h_new) + 1e-6
+    assert float(h_new) >= 0.0
+
+
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.99))
+def test_vp_marginal_monotone(t1, t2):
+    from repro.core import VPSDE
+
+    sde = VPSDE()
+    lo, hi = sorted((t1, t2))
+    m_lo, s_lo = sde.marginal(jnp.asarray(lo))
+    m_hi, s_hi = sde.marginal(jnp.asarray(hi))
+    # corruption increases with t: mean scale shrinks, std grows
+    assert float(m_hi) <= float(m_lo) + 1e-6
+    assert float(s_hi) + 1e-6 >= float(s_lo)
+    # VP: m² + s² ≤ 1 (variance preserved)
+    assert float(m_hi**2 + s_hi**2) <= 1.0 + 1e-5
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(2, 5))
+def test_delay_pattern_roundtrip(B, K, S_mult):
+    from repro.data.tokens import apply_delay_pattern
+
+    S = K + S_mult
+    toks = jnp.arange(B * S * K).reshape(B, S, K) % 17 + 1
+    d = apply_delay_pattern(toks)
+    # codebook k shifted right by k with zero padding
+    for k in range(K):
+        np.testing.assert_array_equal(np.asarray(d[:, :k, k]), 0)
+        np.testing.assert_array_equal(
+            np.asarray(d[:, k:, k]), np.asarray(toks[:, : S - k, k])
+        )

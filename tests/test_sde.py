@@ -1,0 +1,92 @@
+"""SDE process invariants: marginals, kernels, priors, calibration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import VESDE, VPSDE, SubVPSDE, get_sde
+
+
+@pytest.mark.parametrize("name", ["ve", "vp", "subvp"])
+def test_marginal_endpoints(name):
+    sde = get_sde(name)
+    m0, s0 = sde.marginal(jnp.asarray(sde.t_eps))
+    m1, s1 = sde.marginal(jnp.asarray(1.0))
+    # near t=0: almost no corruption
+    assert float(m0) == pytest.approx(1.0, abs=1e-2)
+    assert float(s0) < 0.15
+    # at t=1 the prior: VP/subVP std→1, VE std→sigma_max
+    assert float(s1) == pytest.approx(sde.prior_std(), rel=0.05)
+
+
+@pytest.mark.parametrize("name", ["ve", "vp", "subvp"])
+def test_perturb_matches_marginal_stats(name, rng):
+    sde = get_sde(name)
+    x0 = jnp.full((20000, 1), 0.7)
+    t = jnp.full((20000,), 0.5)
+    z = jax.random.normal(rng, x0.shape)
+    xt = sde.perturb(x0, t, z)
+    m, s = sde.marginal(jnp.asarray(0.5))
+    np.testing.assert_allclose(float(xt.mean()), float(m) * 0.7, atol=4e-2 * float(s))
+    np.testing.assert_allclose(float(xt.std()), float(s), rtol=3e-2)
+
+
+@pytest.mark.parametrize("name", ["ve", "vp"])
+def test_kernel_score_is_gaussian_grad(name, rng):
+    """∇ log N(xt; m·x0, s²) must equal the autodiff gradient."""
+    sde = get_sde(name)
+    x0 = jax.random.normal(rng, (8, 3))
+    t = jnp.linspace(0.2, 0.9, 8)
+    z = jax.random.normal(jax.random.fold_in(rng, 1), x0.shape)
+    xt = sde.perturb(x0, t, z)
+
+    def logp(xt_single, x0_single, t_single):
+        m, s = sde.marginal(t_single)
+        return jnp.sum(-0.5 * ((xt_single - m * x0_single) / s) ** 2)
+
+    autodiff = jax.vmap(jax.grad(logp))(xt, x0, t)
+    np.testing.assert_allclose(
+        np.asarray(sde.kernel_score(xt, x0, t)), np.asarray(autodiff),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_paper_abs_tolerances():
+    """Paper Sec. 3.1.2: ε_abs = 0.0078 for VP ([-1,1]), 0.0039 for VE ([0,1])."""
+    assert VPSDE().abs_tolerance == pytest.approx(2.0 / 256)
+    assert VESDE().abs_tolerance == pytest.approx(1.0 / 256)
+
+
+@pytest.mark.parametrize("name", ["ve", "vp"])
+def test_drift_coeff_linearity(name, rng):
+    sde = get_sde(name)
+    x = jax.random.normal(rng, (4, 5))
+    t = jnp.linspace(0.1, 0.9, 4)
+    a = sde.drift_coeff(t)
+    np.testing.assert_allclose(
+        np.asarray(sde.drift(x, t)), np.asarray(a[:, None] * x),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_ve_sigma_geometric():
+    sde = VESDE(sigma_min=0.01, sigma_max=50.0)
+    assert float(sde.sigma(jnp.asarray(0.0))) == pytest.approx(0.01)
+    assert float(sde.sigma(jnp.asarray(1.0))) == pytest.approx(50.0)
+    # geometric interpolation: log-linear
+    mid = float(sde.sigma(jnp.asarray(0.5)))
+    assert mid == pytest.approx((0.01 * 50.0) ** 0.5, rel=1e-5)
+
+
+def test_tweedie_denoise_recovers_mean(rng):
+    """With the exact conditional score, Tweedie returns E[x0|xt] = x0 when
+    the data is a point mass."""
+    for sde in (VPSDE(), VESDE(sigma_max=5.0)):
+        x0 = jnp.full((4096, 2), 0.25)
+        t = jnp.full((4096,), sde.t_eps)
+        z = jax.random.normal(rng, x0.shape)
+        xt = sde.perturb(x0, t, z)
+        score = sde.kernel_score(xt, x0, t)
+        denoised = sde.tweedie_denoise(xt, score)
+        np.testing.assert_allclose(np.asarray(denoised), np.asarray(x0), atol=1e-4)

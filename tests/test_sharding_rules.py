@@ -1,0 +1,102 @@
+"""Unit tests of the sharding rules against mesh stand-ins (no devices).
+
+The real 256/512-device lowering is exercised by test_dryrun_integration
+(subprocess); here we verify the rule logic: divisibility fallbacks,
+expert vs ffn sharding, vocab sharding, repeat-axis handling.
+"""
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import _spec_for
+
+
+class FakeMesh:
+    """Duck-typed stand-in: .shape mapping + .axis_names."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def spec(path, shape, num_experts=None):
+    return _spec_for(path, shape, MESH, num_experts)
+
+
+def test_attention_projections():
+    # stacked (R, E, H, Dh): heads shard when divisible
+    assert spec("blocks/p0/mixer/wq", (4, 2048, 16, 128)) == P(None, None, "model", None)
+    # kv heads = 8 not divisible by 16 → replicated
+    assert spec("blocks/p0/mixer/wk", (4, 2048, 8, 128)) == P(None, None, None, None)
+    assert spec("blocks/p0/mixer/wo", (4, 16, 128, 2048)) == P(None, "model", None, None)
+
+
+def test_dense_mlp():
+    assert spec("blocks/p0/mlp/w_in", (4, 2048, 8192)) == P(None, None, "model")
+    assert spec("blocks/p0/mlp/w_out", (4, 8192, 2048)) == P(None, "model", None)
+
+
+def test_moe_expert_sharding_divisible():
+    # deepseek: 64 experts % 16 == 0 → shard the expert axis
+    assert spec("blocks/p0/mlp/w_in", (1, 64, 2048, 1408), 64) == \
+        P(None, "model", None, None)
+    assert spec("blocks/p0/mlp/w_out", (1, 64, 1408, 2048), 64) == \
+        P(None, "model", None, None)
+
+
+def test_moe_expert_sharding_fallback():
+    # granite: 40 experts % 16 != 0 → shard each expert's ffn dim instead
+    assert spec("blocks/p0/mlp/w_in", (1, 40, 1536, 512), 40) == \
+        P(None, None, None, "model")
+    assert spec("blocks/p0/mlp/w_out", (1, 40, 512, 1536), 40) == \
+        P(None, None, "model", None)
+
+
+def test_router_replicated():
+    assert spec("blocks/p0/mlp/router", (1, 2048, 64), 64) == P(None, None, None)
+
+
+def test_vocab_sharding():
+    assert spec("embed", (50304, 2048)) == P("model", None)
+    assert spec("lm_head", (2048, 50304)) == P(None, "model")
+    # audio codebook embeds (K, V, E)
+    assert spec("embed", (4, 2048, 1536)) == P(None, "model", None)
+    # odd vocab (granite 49155) → replicate rather than crash
+    assert spec("embed", (49155, 1536)) == P(None, None)
+
+
+def test_mamba_projections():
+    assert spec("blocks/p0/mixer/in_x", (8, 2560, 5120)) == P(None, None, "model")
+    assert spec("blocks/p0/mixer/in_B", (8, 2560, 128)) == P(None, None, None)
+    assert spec("blocks/p0/mixer/A_log", (8, 80)) == P(None, "model")
+    assert spec("blocks/p0/mixer/out", (8, 5120, 2560)) == P(None, "model", None)
+
+
+def test_norms_replicated():
+    assert spec("blocks/p0/norm1/scale", (4, 2048)) == P(None, None)
+
+
+def test_kv_cache_policy():
+    from repro.parallel.sharding import kv_cache_spec
+
+    sizes = {"data": 16, "model": 16}
+    # kv=8 not divisible by model=16 → cache sequence shards over model
+    s = kv_cache_spec(sizes, ("data",), batch=128, cache_len=32768, kv_heads=8)
+    assert s == P(("data",), "model", None, None)
+    # kv=16 divisible → heads shard
+    s = kv_cache_spec(sizes, ("data",), batch=128, cache_len=32768, kv_heads=16)
+    assert s == P(("data",), None, "model", None)
+    # batch=1 long context, kv indivisible: sequence takes data AND model
+    s = kv_cache_spec(sizes, ("data",), batch=1, cache_len=524288, kv_heads=8)
+    assert s == P(None, ("data", "model"), None, None)
+    # batch=1, kv divisible: sequence over data, heads over model
+    s = kv_cache_spec(sizes, ("data",), batch=1, cache_len=524288, kv_heads=16)
+    assert s == P(None, ("data",), "model", None)
+    # multi-pod: batch over (pod, data)
+    sizes2 = {"pod": 2, "data": 16, "model": 16}
+    s = kv_cache_spec(sizes2, ("pod", "data"), batch=128, cache_len=32768,
+                      kv_heads=16)
+    assert s == P(("pod", "data"), None, "model", None)

@@ -1,0 +1,163 @@
+"""Optimizer / EMA / schedules / checkpoint / data-pipeline tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.images import GMM2D, GMMImageConfig, sample_images
+from repro.data.tokens import TokenPipelineConfig, lm_loss, synth_batch
+from repro.optim import (
+    AdamW, ema_init, ema_update, global_norm, warmup_cosine,
+)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic(rng):
+    target = jax.random.normal(rng, (16,))
+    params = {"w": jnp.zeros((16,))}
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return opt.update(grads, state, params)
+
+    for _ in range(200):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+
+
+def test_grad_clipping_bounds_update(rng):
+    params = {"w": jnp.zeros((4,))}
+    opt = AdamW(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e9)}
+    p2, _ = opt.update(huge, state, params)
+    # first-step Adam update magnitude ≈ lr regardless, but moments were fed
+    # the clipped gradient — verify the clipped norm directly:
+    assert float(global_norm(jax.tree.map(
+        lambda g: g * jnp.minimum(1.0, 1e-3 / global_norm(huge)), huge
+    ))) <= 1e-3 * 1.01
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, 10, 100)
+    assert float(sched(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+    # monotone decay after warmup
+    vals = [float(sched(jnp.asarray(s))) for s in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_ema_converges_to_constant(rng):
+    p = {"w": jnp.zeros((4,))}
+    ema = ema_init(p)
+    target = {"w": jnp.ones((4,))}
+    for _ in range(2000):
+        ema = ema_update(ema, target, decay=0.99)
+    np.testing.assert_allclose(np.asarray(ema["w"]), 1.0, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {
+        "a": jax.random.normal(rng, (3, 4)),
+        "nested": {"b": jnp.arange(5), "c": [jnp.ones(2), jnp.zeros(3)]},
+    }
+    save_checkpoint(str(tmp_path), 7, tree, metadata={"note": "x"})
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path, rng):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"b": jnp.ones(2)})
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_shaped():
+    cfg = TokenPipelineConfig(vocab_size=100, seq_len=32, global_batch=4)
+    b1 = synth_batch(cfg, 3)
+    b2 = synth_batch(cfg, 3)
+    b3 = synth_batch(cfg, 4)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    assert bool(jnp.any(b1 != b3))
+    assert b1.shape == (4, 32) and b1.dtype == jnp.int32
+    assert int(b1.min()) >= 0 and int(b1.max()) < 100
+
+
+def test_token_stream_zipfian():
+    cfg = TokenPipelineConfig(vocab_size=1000, seq_len=4096, global_batch=8)
+    b = np.asarray(synth_batch(cfg, 0)).ravel()
+    # low ids should dominate high ids by a wide margin
+    low = np.mean(b < 50)
+    high = np.mean(b >= 500)
+    assert low > 5 * high
+
+
+def test_codebook_stream_shape():
+    cfg = TokenPipelineConfig(vocab_size=64, seq_len=16, global_batch=2,
+                              num_codebooks=4)
+    b = synth_batch(cfg, 0)
+    assert b.shape == (2, 16, 4)
+
+
+def test_lm_loss_at_uniform():
+    V = 32
+    logits = jnp.zeros((2, 10, V))
+    toks = jnp.zeros((2, 10), jnp.int32)
+    assert float(lm_loss(logits, toks)) == pytest.approx(float(jnp.log(V)), rel=1e-5)
+
+
+def test_gmm_images_in_range(rng):
+    cfg = GMMImageConfig(image_size=16)
+    x = sample_images(cfg, rng, 64)
+    assert x.shape == (64, 16, 16, 3)
+    assert float(x.min()) >= -1.0 and float(x.max()) <= 1.0
+
+
+def test_gmm2d_score_matches_autodiff(rng):
+    """Closed-form mixture score vs autodiff of the exact log-density."""
+    from repro.core import VPSDE
+
+    gmm = GMM2D()
+    sde = VPSDE()
+    score_fn = gmm.score_at_time(sde)
+    x = jax.random.normal(rng, (16, 2)) * 2.0
+    t = jnp.linspace(0.05, 0.95, 16)
+
+    means = jnp.asarray(gmm.means)
+    w = jnp.asarray(gmm.weights)
+
+    def logp(xi, ti):
+        m, s = sde.marginal(ti)
+        var = (m * gmm.std) ** 2 + s**2
+        comp = -0.5 * jnp.sum((xi - m * means) ** 2, -1) / var - jnp.log(var)
+        return jax.scipy.special.logsumexp(comp + jnp.log(w))
+
+    want = jax.vmap(jax.grad(logp))(x, t)
+    got = score_fn(x, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)

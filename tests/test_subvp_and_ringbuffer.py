@@ -1,0 +1,98 @@
+"""Extra coverage: sub-VP process through the solver stack, and
+hypothesis property tests on the ring-buffer KV cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SubVPSDE, sample
+from repro.models.kvcache import cache_write, init_kv_cache, valid_mask
+
+settings.register_profile("ci2", deadline=None, max_examples=25)
+settings.load_profile("ci2")
+
+
+# --------------------------------------------------------------------------
+# sub-VP
+# --------------------------------------------------------------------------
+
+def test_subvp_solvers_recover_gaussian(rng):
+    sde = SubVPSDE()
+    mu, s0 = 0.2, 0.4
+
+    def score(x, t):
+        m, std = sde.marginal(t)
+        m, std = m[:, None], std[:, None]
+        return -(x - m * mu) / (m * m * s0 * s0 + std * std)
+
+    for method, kw in [("em", dict(n_steps=300)),
+                       ("adaptive", dict(eps_rel=0.05))]:
+        res = jax.jit(lambda k: sample(sde, score, (1024, 8), k,
+                                       method=method, **kw))(rng)
+        assert float(res.x.mean()) == pytest.approx(mu, abs=0.06), method
+        assert float(res.x.std()) == pytest.approx(s0, abs=0.06), method
+
+
+def test_subvp_diffusion_smaller_than_vp():
+    """sub-VP: g²(t) = β(t)(1−e^{−2∫β}) ≤ β(t) = g²_VP(t)."""
+    from repro.core import VPSDE
+
+    sub, vp = SubVPSDE(), VPSDE()
+    for t in (0.1, 0.5, 0.9):
+        assert float(sub.diffusion(jnp.asarray(t))) <= \
+            float(vp.diffusion(jnp.asarray(t))) + 1e-6
+
+
+# --------------------------------------------------------------------------
+# ring-buffer cache properties
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 24), st.integers(2, 8), st.integers(0, 6))
+def test_ring_buffer_holds_most_recent(n_writes, cache_len, window_off):
+    """After n writes into a length-L ring, the valid slots are exactly
+    the most recent min(n, L, window) positions."""
+    cache = init_kv_cache(1, cache_len, 1, 4, jnp.float32)
+    for i in range(n_writes):
+        kv = jnp.full((1, 1, 1, 4), float(i))
+        cache = cache_write(cache, kv, kv)
+    window = window_off + 1
+    m = np.asarray(valid_mask(cache, window))
+    visible_positions = sorted(
+        int(p) for p, ok in zip(np.asarray(cache.pos), m) if ok and p >= 0
+    )
+    want_lo = max(n_writes - min(window, cache_len, n_writes), 0)
+    assert visible_positions == list(range(want_lo, n_writes))
+
+
+@given(st.integers(1, 20), st.integers(2, 8))
+def test_ring_buffer_slot_contents(n_writes, cache_len):
+    """The slot holding position p must contain the value written at p."""
+    cache = init_kv_cache(1, cache_len, 1, 4, jnp.float32)
+    for i in range(n_writes):
+        kv = jnp.full((1, 1, 1, 4), float(i))
+        cache = cache_write(cache, kv, kv)
+    pos = np.asarray(cache.pos)
+    k = np.asarray(cache.k)[0, :, 0, 0]
+    for slot, p in enumerate(pos):
+        if p >= 0:
+            assert k[slot] == float(p), (slot, p, k)
+
+
+@given(st.integers(2, 12), st.integers(0, 10))
+def test_start_pos_mask_excludes_history(cache_len, start):
+    """Continuous-batching isolation: no position < start_pos is ever
+    visible, regardless of ring state."""
+    cache = init_kv_cache(2, cache_len, 1, 4, jnp.float32)
+    for i in range(cache_len + 3):
+        kv = jnp.ones((2, 1, 1, 4))
+        cache = cache_write(cache, kv, kv)
+    sp = jnp.asarray([0, start], jnp.int32)
+    m = np.asarray(valid_mask(cache, None, sp))  # (2, L)
+    pos = np.asarray(cache.pos)
+    for slot in range(cache_len):
+        if pos[slot] >= 0 and pos[slot] < start:
+            assert not m[1, slot]
+        # lane 0 (start 0) sees everything valid
+    assert m[0].sum() >= m[1].sum()

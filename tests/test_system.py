@@ -1,0 +1,57 @@
+"""System-level behaviour: the public API wires together end-to-end."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    VESDE, VPSDE, available_solvers, get_sde, sample,
+)
+
+
+def test_solver_registry_complete():
+    have = set(available_solvers())
+    assert {"adaptive", "em", "pc", "ode", "ddim"} <= have
+
+
+def test_sde_factory():
+    assert isinstance(get_sde("ve"), VESDE)
+    assert isinstance(get_sde("vp"), VPSDE)
+
+
+def test_arch_registry_complete():
+    from repro.configs import ARCH_IDS
+
+    want = {
+        "olmo-1b", "qwen1.5-0.5b", "qwen3-14b", "jamba-v0.1-52b",
+        "llama-3.2-vision-90b", "granite-moe-3b-a800m", "gemma3-12b",
+        "mamba2-2.7b", "deepseek-moe-16b", "musicgen-medium",
+    }
+    assert set(ARCH_IDS) == want
+
+
+def test_shape_policy():
+    from repro.configs import apply_shape_policy, get_config, get_shape
+
+    # pure full-attention arch gets the SWA override on long_500k only
+    olmo = get_config("olmo-1b")
+    long = get_shape("long_500k")
+    assert apply_shape_policy(olmo, long).mixer_pattern == ("L",)
+    assert apply_shape_policy(olmo, get_shape("train_4k")).mixer_pattern == ("A",)
+    # natively sub-quadratic archs unchanged
+    mamba = get_config("mamba2-2.7b")
+    assert apply_shape_policy(mamba, long).mixer_pattern == ("M",)
+    gemma = get_config("gemma3-12b")
+    assert apply_shape_policy(gemma, long) == gemma
+
+
+def test_sampling_is_deterministic_given_key(rng):
+    sde = VPSDE()
+
+    def score(x, t):
+        m, s = sde.marginal(t)
+        return -(x - m[:, None] * 0.1) / (m[:, None] ** 2 * 0.04 + s[:, None] ** 2)
+
+    r1 = sample(sde, score, (8, 4), rng, method="adaptive", eps_rel=0.05)
+    r2 = sample(sde, score, (8, 4), rng, method="adaptive", eps_rel=0.05)
+    assert bool(jnp.all(r1.x == r2.x))
+    assert bool(jnp.all(r1.nfe == r2.nfe))
