@@ -1,0 +1,99 @@
+"""Sharded-sampling scaling: samples/sec for 1 vs N fake host devices.
+
+Captures the data-parallel scaling axis of ``sample(..., mesh=...)``
+(DESIGN.md §3) in the ``name,us_per_call,derived`` CSV the perf
+trajectory tracks. Device counts are faked with
+``xla_force_host_platform_device_count`` — on a CPU host the shards
+share the same cores, so absolute samples/sec is NOT expected to scale;
+what this captures is the overhead of the sharded program (partitioned
+prior draw, constrained while-loop carry, shard_map'd fused kernel)
+relative to the single-device run, and it becomes a true scaling curve
+the moment it runs on real accelerators.
+
+Each device count runs in a subprocess (device count locks at jax init).
+
+  PYTHONPATH=src python -m benchmarks.bench_sharded_sampling [--devices 1,4]
+"""
+
+from __future__ import annotations
+
+# Child mode must set XLA_FLAGS before jax initializes.
+import os  # noqa: E402
+import sys  # noqa: E402
+
+if __name__ == "__main__" and "--child" in sys.argv:
+    _n = sys.argv[sys.argv.index("--child") + 1]
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+import argparse
+import subprocess
+
+BATCH = 64
+DIM = 256
+EPS_REL = 0.05
+
+
+def _child(n_devices: int, use_fused: bool) -> None:
+    import jax
+
+    from benchmarks.common import emit, timed
+    from repro.core import AdaptiveConfig, VPSDE, sample
+
+    mu, s0 = 0.3, 0.5
+    sde = VPSDE()
+
+    def score(x, t):
+        m, std = sde.marginal(t)
+        m = m.reshape((-1, 1))
+        std = std.reshape((-1, 1))
+        return -(x - m * mu) / (m * m * s0 * s0 + std * std)
+
+    mesh = jax.make_mesh((n_devices,), ("data",)) if n_devices > 1 else None
+    cfg = AdaptiveConfig(eps_rel=EPS_REL, use_fused_kernel=use_fused)
+    fn = jax.jit(
+        lambda k: sample(sde, score, (BATCH, DIM), k, config=cfg, mesh=mesh)
+    )
+    us, res = timed(fn, jax.random.PRNGKey(0), repeats=3)
+    sps = BATCH / (us / 1e6)
+    tag = "fused" if use_fused else "jnp"
+    emit(
+        f"sharded_sampling/{tag}/dev{n_devices}", us,
+        f"samples_per_sec={sps:.1f};batch={BATCH};mean_nfe={float(res.mean_nfe):.0f}",
+    )
+
+
+def main(device_counts=(1, 4)) -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    for n in device_counts:
+        for fused in (False, True):
+            cmd = [sys.executable, "-m", "benchmarks.bench_sharded_sampling",
+                   "--child", str(n)]
+            if fused:
+                cmd.append("--fused")
+            r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=560, cwd=root)
+            if r.returncode != 0:
+                print(f"# sharded_sampling dev{n} fused={fused} FAILED: "
+                      f"{r.stderr.strip().splitlines()[-1:]}", file=sys.stderr)
+                continue
+            for line in r.stdout.strip().splitlines():
+                if line.startswith("sharded_sampling/"):
+                    print(line)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", type=int, default=None,
+                    help="(internal) run one measurement on N fake devices")
+    ap.add_argument("--fused", action="store_true")
+    ap.add_argument("--devices", default="1,4",
+                    help="comma-separated device counts for the sweep")
+    args = ap.parse_args()
+    if args.child is not None:
+        _child(args.child, args.fused)
+    else:
+        main(tuple(int(x) for x in args.devices.split(",")))

@@ -14,6 +14,7 @@ from . import (
     bench_dimensionality,
     bench_kernels,
     bench_serving,
+    bench_sharded_sampling,
     table1_solver_grid,
     table2_highdim,
     table3_offtheshelf,
@@ -28,6 +29,7 @@ SUITES = {
     "dimensionality": bench_dimensionality.main,  # beyond-paper
     "kernels": bench_kernels.main,
     "serving": bench_serving.main,
+    "sharded_sampling": bench_sharded_sampling.main,  # 1-vs-N device scaling
 }
 
 

@@ -23,6 +23,7 @@ two numerically identical implementations:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional
 
 import jax
@@ -95,6 +96,26 @@ def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
     )
 
 
+def _step_math_fused_sharded(
+    x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs, *, sharding
+):
+    """Fused path under a batch-sharded mesh: shard_map'd Pallas kernel
+    with per-shard in-VMEM error reduction (DESIGN.md §3)."""
+    from repro.kernels.solver_step import ops as fused
+
+    if cfg.error_norm != "l2":
+        raise ValueError("fused kernel implements the paper's ℓ2 norm only")
+    axes = sharding.spec[0]
+    return fused.sharded_error_step(
+        x, x_prime, score2, z, x_prev, e0, d1, d2,
+        eps_abs=eps_abs,
+        eps_rel=cfg.eps_rel,
+        use_prev=cfg.prev_tolerance,
+        mesh=sharding.mesh,
+        batch_axes=(axes,) if isinstance(axes, str) else tuple(axes),
+    )
+
+
 @register_solver("adaptive")
 def adaptive(
     sde: SDE,
@@ -104,19 +125,51 @@ def adaptive(
     *,
     config: AdaptiveConfig | None = None,
     denoise: bool = True,
+    sharding=None,
     **overrides,
 ) -> SolveResult:
-    """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively."""
+    """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively.
+
+    ``sharding`` (a batch-axis NamedSharding, normally produced by
+    ``repro.parallel.sharding.sample_state_shardings`` and threaded down
+    from ``sample(..., mesh=...)``) constrains every (B, ...) and (B,)
+    carry of the while loop so GSPMD keeps the whole loop — both score
+    evaluations, the step math, and the accept/adapt bookkeeping — data
+    parallel with zero resharding (DESIGN.md §3). Numerics are identical
+    to the unsharded run: the batch is embarrassingly parallel and the
+    PRNG is sharding-invariant.
+    """
     cfg = config or AdaptiveConfig(**overrides)
     if overrides and config is not None:
         cfg = dataclasses.replace(config, **overrides)
     eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
 
-    batch = x_init.shape[0]
-    t0 = jnp.full((batch,), sde.T, jnp.float32)
-    h0 = jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
+    # a P() spec (fully replicated) has no leading entry — treat as None
+    batch_axes = (
+        sharding.spec[0] if sharding is not None and len(sharding.spec) else None
+    )
+    if sharding is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-    step_math = _step_math_fused if cfg.use_fused_kernel else _step_math_jnp
+        vec_sharding = NamedSharding(sharding.mesh, P(batch_axes))
+        c_arr = lambda a: jax.lax.with_sharding_constraint(a, sharding)
+        c_vec = lambda v: jax.lax.with_sharding_constraint(v, vec_sharding)
+    else:
+        c_arr = c_vec = lambda a: a
+
+    batch = x_init.shape[0]
+    x_init = c_arr(x_init)
+    t0 = c_vec(jnp.full((batch,), sde.T, jnp.float32))
+    h0 = c_vec(
+        jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
+    )
+
+    if not cfg.use_fused_kernel:
+        step_math = _step_math_jnp
+    elif batch_axes is not None:
+        step_math = functools.partial(_step_math_fused_sharded, sharding=sharding)
+    else:
+        step_math = _step_math_fused
 
     def em_coeffs(t, h):
         """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars)."""
@@ -141,12 +194,14 @@ def adaptive(
         t2 = jnp.clip(t_c - h_c, sde.t_eps, sde.T)
 
         key, sub = jax.random.split(key)
-        z = jax.random.normal(sub, x.shape, x.dtype)
+        z = c_arr(jax.random.normal(sub, x.shape, x.dtype))
 
         # --- low-order proposal: one reverse-EM step --------------------
         score1 = score_fn(x, t_c)
         c0, c1, c2 = em_coeffs(t_c, h_c)
-        x_prime = _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
+        x_prime = c_arr(
+            _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
+        )
 
         # --- high-order proposal: stochastic Improved Euler -------------
         score2 = score_fn(x_prime, t2)
@@ -161,15 +216,15 @@ def adaptive(
 
         accept = jnp.logical_and(err <= 1.0, active)
         acc_e = _expand(accept, x)
-        x_new = jnp.where(acc_e, proposal, x)
-        x_prev_new = jnp.where(acc_e, x_prime, x_prev)
-        t_new = jnp.where(accept, t - h, t)
+        x_new = c_arr(jnp.where(acc_e, proposal, x))
+        x_prev_new = c_arr(jnp.where(acc_e, x_prime, x_prev))
+        t_new = c_vec(jnp.where(accept, t - h, t))
 
         remaining = jnp.maximum(t_new - sde.t_eps, 0.0)
         h_new = next_step_size(
             h, err, remaining, safety=cfg.safety, r_exponent=cfg.r_exponent
         )
-        h_new = jnp.where(active, h_new, h)
+        h_new = c_vec(jnp.where(active, h_new, h))
 
         two = jnp.where(active, 2, 0).astype(jnp.int32)
         return (
@@ -178,13 +233,13 @@ def adaptive(
             t_new,
             h_new,
             key,
-            nfe + two,
-            acc + accept.astype(jnp.int32),
-            rej + jnp.logical_and(~accept, active).astype(jnp.int32),
+            c_vec(nfe + two),
+            c_vec(acc + accept.astype(jnp.int32)),
+            c_vec(rej + jnp.logical_and(~accept, active).astype(jnp.int32)),
             iters + 1,
         )
 
-    zeros = jnp.zeros((batch,), jnp.int32)
+    zeros = c_vec(jnp.zeros((batch,), jnp.int32))
     init: State = (
         x_init, x_init, t0, h0, key, zeros, zeros, zeros, jnp.asarray(0, jnp.int32)
     )

@@ -6,6 +6,12 @@ to the Pallas kernel (interpret=True on CPU so the same code path is
 exercised everywhere). Padding is with zeros, which contribute exactly 0
 to the error sum (δ ≥ ε_abs > 0), and the e2 normalization uses the true
 unpadded D.
+
+``sharded_error_step`` is the mesh-parallel form (DESIGN.md §3): a
+``shard_map`` whose per-shard body runs the same Pallas kernel on its
+local batch (and optionally feature) block, keeping the error reduction
+in VMEM per shard and combining across feature shards with the O(B)
+collective in ``repro.parallel.collectives``.
 """
 
 from __future__ import annotations
@@ -14,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import kernel as _k
 
@@ -26,14 +33,19 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _flatten_pad(x: Array):
+def _flatten_pad_to(x: Array, multiple: int):
+    """Flatten to (B, D) and zero-pad D up to ``multiple``."""
     B = x.shape[0]
     flat = x.reshape(B, -1)
     D = flat.shape[1]
-    pad = (-D) % _LANES
+    pad = (-D) % multiple
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
     return flat, D
+
+
+def _flatten_pad(x: Array):
+    return _flatten_pad_to(x, _LANES)
 
 
 def em_step(x, score, z, c0, c1, c2, *, interpret: bool | None = None) -> Array:
@@ -71,4 +83,70 @@ def error_step(
     # kernel normalized by padded D; rescale to the true dimension count.
     Dpad = xf.shape[1]
     e2 = acc_e2 * jnp.sqrt(Dpad / D)
+    return x_high[:, :D].reshape(orig_shape), e2
+
+
+def sharded_error_step(
+    x, x_prime, score2, z, x_prev, e0, d1, d2,
+    *,
+    eps_abs: float,
+    eps_rel: float,
+    mesh: Mesh,
+    batch_axes,
+    feature_axis: str | None = None,
+    use_prev: bool = True,
+    interpret: bool | None = None,
+):
+    """``error_step`` with the batch axis sharded over ``batch_axes``.
+
+    Each shard dispatches the Pallas kernel on its local (B/n, Dpad/f)
+    block, so the ~10-pass elementwise math and the squared-residual
+    reduction never leave the shard's VMEM. With ``feature_axis`` the
+    flattened feature dim additionally shards and the per-sample error is
+    combined exactly across shards via
+    ``repro.parallel.collectives.scaled_error_l2_psum`` (zero padding
+    contributes 0 to every partial sum). Numerics match ``error_step``
+    bit-for-bit in the batch-only case: rows are independent and each
+    shard walks the same D-grid sequence.
+
+    Returns (x'' with x's shape, e2 (B,)).
+    """
+    from repro.parallel.collectives import scaled_error_l2_psum
+    from repro.parallel.compat import shard_map
+
+    interpret = _on_cpu() if interpret is None else interpret
+    batch_axes = (batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes)
+    fsize = mesh.shape[feature_axis] if feature_axis else 1
+    orig_shape = x.shape
+
+    xf, D = _flatten_pad_to(x, fsize * _LANES)
+    xpf, _ = _flatten_pad_to(x_prime, fsize * _LANES)
+    s2f, _ = _flatten_pad_to(score2, fsize * _LANES)
+    zf, _ = _flatten_pad_to(z, fsize * _LANES)
+    xvf, _ = _flatten_pad_to(x_prev, fsize * _LANES)
+    Dpad = xf.shape[1]
+
+    def body(xl, xpl, s2l, zl, xvl, e0l, d1l, d2l):
+        x_high, e2_loc = _k.error_step(
+            xl, xpl, s2l, zl, xvl, e0l, d1l, d2l,
+            eps_abs=float(eps_abs), eps_rel=float(eps_rel), use_prev=use_prev,
+            interpret=interpret,
+        )
+        D_loc = xl.shape[1]
+        if feature_axis is None:
+            # per-sample reduction is shard-local; renormalize padded→true D
+            return x_high, e2_loc * jnp.sqrt(D_loc / D)
+        acc = e2_loc * e2_loc * D_loc  # undo the kernel's local normalization
+        return x_high, scaled_error_l2_psum(acc, D / fsize, feature_axis)
+
+    state_spec = P(batch_axes, feature_axis)
+    coeff_spec = P(batch_axes)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(state_spec,) * 5 + (coeff_spec,) * 3,
+        out_specs=(state_spec, coeff_spec),
+        check_rep=False,  # no replication rule for pallas_call
+    )
+    x_high, e2 = fn(xf, xpf, s2f, zf, xvf, e0, d1, d2)
     return x_high[:, :D].reshape(orig_shape), e2

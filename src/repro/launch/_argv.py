@@ -1,0 +1,17 @@
+"""Pre-argparse argv scanning for flags that must be read before jax
+initializes (fake device counts lock in at first init). No jax imports
+here — launchers import this above ``import jax``."""
+
+from __future__ import annotations
+
+import sys
+
+
+def argv_value(flag: str, default: str | None = None):
+    """Value of ``--flag N`` or ``--flag=N`` from sys.argv, else default."""
+    for i, a in enumerate(sys.argv):
+        if a == flag and i + 1 < len(sys.argv):
+            return sys.argv[i + 1]
+        if a.startswith(flag + "="):
+            return a.split("=", 1)[1]
+    return default

@@ -1,7 +1,7 @@
 """Diffusion-sampling launcher + production-mesh dry-run of the paper's
 technique itself (beyond the assigned 40 combos).
 
-Two entry points:
+Three entry points:
 
   * run mode (CPU or mesh): train-free demo sampling from a DiT score
     net with any solver;
@@ -10,15 +10,35 @@ Two entry points:
     per-sample accept/adapt) for the high-res DiT on the 16×16 / 2×16×16
     meshes, with the batch sharded over data axes and the DiT weights
     tensor-parallel — proving the paper's sampler distributes on the
-    same production mesh as the LM stack, and feeding §Roofline.
+    same production mesh as the LM stack, and feeding §Roofline;
+  * ``--dryrun-loop``: lower + compile the ENTIRE adaptive sampling
+    loop — ``sample(..., mesh=...)``: sharded prior draw, the
+    lax.while_loop with its per-sample carry, both score forwards, and
+    the final Tweedie denoise — on a fake multi-device data mesh
+    (DESIGN.md §3). This is the full distributed program the serving
+    path repeats, checkable on a CPU-only host.
 
   PYTHONPATH=src python -m repro.launch.sample --dryrun [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.sample --dryrun-loop [--loop-devices 64]
 """
 
 import os  # noqa: E402
-if "--dryrun" in __import__("sys").argv:
+import sys  # noqa: E402
+
+from repro.launch._argv import argv_value  # noqa: E402
+
+if "--dryrun" in sys.argv:
     os.environ["XLA_FLAGS"] = (
         "--xla_force_host_platform_device_count=512 "
+        "--xla_backend_optimization_level=0 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+elif "--dryrun-loop" in sys.argv:
+    _n = argv_value("--loop-devices", "64")
+    if not (_n.isdigit() and int(_n) > 0):
+        _n = "64"  # argparse reports the malformed value after imports
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
         "--xla_backend_optimization_level=0 "
         + os.environ.get("XLA_FLAGS", "")
     )
@@ -260,6 +280,70 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
     return rec
 
 
+def dryrun_loop(batch: int = 256) -> dict:
+    """Lower + compile the whole sharded sampling loop on a fake data mesh.
+
+    Unlike ``dryrun`` (one solver iteration), this compiles the complete
+    distributed program of ``sample(..., mesh=...)``: sharded prior draw,
+    the adaptive lax.while_loop with its per-sample (B,) carry, both
+    score-net forwards per iteration, and the Tweedie denoise — verifying
+    that GSPMD keeps every iteration data-parallel (collective bytes
+    should stay O(loop-bookkeeping), not O(activations)).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    net = CIFAR_DIT
+    sde = VPSDE()
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("data",))
+    assert batch % ndev == 0, f"batch {batch} must divide {ndev} devices"
+
+    params_abs = jax.eval_shape(lambda k: init_dit(net, k),
+                                jax.random.PRNGKey(0))
+    rep = NamedSharding(mesh, P())
+    p_shard = jax.tree_util.tree_map(lambda _: rep, params_abs)
+    shp = (batch, net.image_size, net.image_size, net.channels)
+
+    def run(params, key):
+        def score_fn(x, t):
+            _, std = sde.marginal(t)
+            return -dit_forward(params, x, t, net) / std.reshape(-1, 1, 1, 1)
+
+        return sample(sde, score_fn, shp, key, method="adaptive",
+                      mesh=mesh, config=AdaptiveConfig(eps_rel=0.02))
+
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    t0 = time.time()
+    compiled = jax.jit(
+        run, in_shardings=(p_shard, rep),
+    ).lower(params_abs, key_abs).compile()
+    mem = compiled.memory_analysis()
+    cost = summarize_cost(compiled.cost_analysis())
+    coll = collective_bytes_from_text(compiled.as_text())
+    rec = {
+        "arch": "dit-cifar-sampler-whole-loop",
+        "shape": f"sample_b{batch}_32px",
+        "mesh": f"data{ndev}",
+        "devices": ndev,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {"peak_bytes": getattr(mem, "peak_memory_in_bytes", None)},
+        "cost": cost,
+        "collectives": coll,
+        "note": "full adaptive while_loop (prior + solver + denoise), batch sharded",
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(
+            OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    gb = 1024 ** 3
+    print(f"[{rec['arch']} × {rec['shape']} × {rec['mesh']}] OK  "
+          f"compile {rec['compile_s']}s  "
+          f"flops/dev {cost.get('flops', 0):.3e}  "
+          f"peak/dev {(rec['memory']['peak_bytes'] or 0) / gb:.2f} GiB  "
+          f"coll {coll['total_bytes'] / gb:.3f} GiB")
+    return rec
+
+
 def demo() -> None:
     net = DiTConfig(image_size=16, patch=4, d_model=96, num_layers=2,
                     num_heads=4, d_ff=256)
@@ -277,6 +361,10 @@ def demo() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--dryrun-loop", action="store_true",
+                    help="compile the whole sharded sampling loop")
+    ap.add_argument("--loop-devices", type=int, default=64,
+                    help="fake host devices for --dryrun-loop (set pre-init)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--pipeline", action="store_true",
                     help="GPipe the DiT layer stack over the pod axis")
@@ -284,6 +372,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.dryrun:
         dryrun(args.multi_pod, args.batch, pipeline=args.pipeline)
+    elif args.dryrun_loop:
+        dryrun_loop(args.batch)
     else:
         demo()
 

@@ -1,16 +1,36 @@
-"""Batched decode serving launcher.
+"""Serving launchers: batched LM decode, and mesh-sharded diffusion.
 
-Prefills a batch of prompts through ``forward`` (building the KV caches
-by replaying tokens through ``serve_step`` — exact, cache-consistent),
-then decodes greedily. On CPU this demonstrates the full serving path
-with reduced configs; the production mesh lowers the same ``serve_step``.
+LM mode prefills a batch of prompts through ``forward`` (building the KV
+caches by replaying tokens through ``serve_step`` — exact,
+cache-consistent), then decodes greedily. On CPU this demonstrates the
+full serving path with reduced configs; the production mesh lowers the
+same ``serve_step``.
+
+``--diffusion`` runs the continuous-batching diffusion server
+(DESIGN.md §4) instead, optionally sharded over ``--fake-devices N``
+placeholder devices so the per-device slot-refill path is exercised on a
+CPU-only host exactly as it would run on a real data-parallel mesh.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --batch 4 --prompt-len 32 --gen-len 32
+  PYTHONPATH=src python -m repro.launch.serve --diffusion --fake-devices 4 \
+      --slots 8 --requests 32
 """
 
 from __future__ import annotations
+
+# Placeholder devices MUST be requested before jax first initializes.
+import os  # noqa: E402
+
+from repro.launch._argv import argv_value  # noqa: E402
+
+_n = argv_value("--fake-devices")
+if _n and _n.isdigit() and int(_n) > 0:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 import argparse
 import time
@@ -57,14 +77,72 @@ def serve_batch(
     return jnp.concatenate(out, axis=1)
 
 
+def serve_diffusion(*, slots: int, requests: int, image_size: int = 8) -> dict:
+    """Continuous-batching diffusion serving on the ambient device set.
+
+    Builds a data-parallel mesh over every available device, shards the
+    slot batch across it, and drains ``requests`` prior-seeded requests
+    through a small DiT score net. Returns (and prints) throughput plus
+    the per-device refill counts that evidence independent slot refill.
+    """
+    from repro.core import AdaptiveConfig, VPSDE
+    from repro.launch.sample import make_sample_step
+    from repro.models.dit import DiTConfig, init_dit
+    from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+    ndev = jax.device_count()
+    mesh = jax.make_mesh((ndev,), ("data",))
+    net = DiTConfig(image_size=image_size, patch=4, d_model=32, num_layers=2,
+                    num_heads=2, d_ff=64)
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    params = init_dit(net, jax.random.PRNGKey(0))
+    step = make_sample_step(net, sde, cfg)
+    b = DiffusionBatcher(sde, step, params,
+                         (image_size, image_size, net.channels),
+                         slots=slots, cfg=cfg, mesh=mesh)
+    for uid in range(requests):
+        b.submit(ImageRequest(uid=uid, seed=uid))
+    t0 = time.time()
+    done = b.run_to_completion()
+    dt = time.time() - t0
+    nfes = [done[u].nfe for u in sorted(done)]
+    rec = {
+        "devices": ndev,
+        "slots": slots,
+        "slots_per_device": b.slots_per_device,
+        "completed": len(done),
+        "samples_per_sec": len(done) / dt,
+        "mean_nfe": sum(nfes) / len(nfes),
+        "refills_per_device": list(b.refills_per_device),
+    }
+    print(f"diffusion serve: {rec['completed']}/{requests} requests in {dt:.1f}s "
+          f"({rec['samples_per_sec']:.2f} samples/s) on {ndev} device(s), "
+          f"{b.slots_per_device} slots/device, mean NFE {rec['mean_nfe']:.0f}, "
+          f"refills/device {rec['refills_per_device']}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--diffusion", action="store_true",
+                    help="run the mesh-sharded diffusion server instead")
+    ap.add_argument("--fake-devices", type=int, default=None,
+                    help="force N placeholder host devices (set pre-init)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32)
     args = ap.parse_args()
+
+    if args.diffusion:
+        serve_diffusion(slots=args.slots, requests=args.requests)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --diffusion is given")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -5,9 +5,10 @@ from .sharding import (
     kv_cache_sharding,
     param_shardings,
     replicated,
+    sample_state_shardings,
 )
 
 __all__ = [
     "MODEL_AXIS", "batch_sharding", "data_axes", "kv_cache_sharding",
-    "param_shardings", "replicated",
+    "param_shardings", "replicated", "sample_state_shardings",
 ]

@@ -21,7 +21,27 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import compat as _compat
+
 Array = jax.Array
+
+
+def scaled_error_l2_psum(sq_sum: Array, n_local, axis) -> Array:
+    """Cross-device combine for the solver's scaled ℓ2 error (DESIGN.md §3).
+
+    Each shard contributes its per-sample sum of squared scaled residuals
+    ``sq_sum`` (B_local,) over ``n_local`` locally-held elements; the
+    global dimension-normalized error is
+
+        E₂ = sqrt( psum(sq_sum) / psum(n) )
+
+    with O(B) traffic per shard — the distributed form of
+    ``repro.core.tolerance.scaled_error_l2``. Must be called inside a
+    ``shard_map`` whose mesh carries ``axis``.
+    """
+    total = jax.lax.psum(sq_sum, axis)
+    n = jax.lax.psum(jnp.asarray(n_local, sq_sum.dtype), axis)
+    return jnp.sqrt(total / n)
 
 
 def _local_write_and_attend(
@@ -35,7 +55,7 @@ def _local_write_and_attend(
     n = 1
     my_index = jnp.zeros((), jnp.int32)
     for a in axis:
-        sz = jax.lax.axis_size(a)
+        sz = _compat.axis_size(a)
         my_index = my_index * sz + jax.lax.axis_index(a).astype(jnp.int32)
         n = n * sz
     Sc = Scl * n
@@ -109,13 +129,8 @@ def flash_decode(
     )
     # Resolve the ambient mesh: the launchers use the legacy `with mesh:`
     # context, which jax.shard_map's context-mesh lookup doesn't see.
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        from jax._src import mesh as _mesh_lib
-
-        phys = _mesh_lib.thread_resources.env.physical_mesh
-        mesh = phys if not phys.empty else None
-    fn = jax.shard_map(
+    mesh = _compat.ambient_mesh()
+    fn = _compat.shard_map(
         body,
         in_specs=(
             P(), P(), P(),                       # q, k_new, v_new replicated over axis

@@ -1,0 +1,104 @@
+"""Version compatibility for shard_map across JAX releases.
+
+Newer JAX exposes ``jax.shard_map`` (with ``axis_names``) and
+``jax.sharding.get_abstract_mesh``; 0.4.x has neither — shard_map lives
+in ``jax.experimental.shard_map`` and the ambient mesh only exists as
+the legacy ``with mesh:`` thread resource. These two helpers paper over
+the difference so ``collectives``/``pipeline`` run on both.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_rep: bool | None = None):
+    """Dispatch to ``jax.shard_map`` when present, else the experimental one.
+
+    ``axis_names`` keeps new-JAX semantics on the fallback too: unlisted
+    mesh axes stay *automatic* (GSPMD-partitioned), which the
+    experimental API expresses as the ``auto=`` complement. Without that
+    mapping a (data, model) mesh would treat the body as manual over
+    every axis and the in_specs would force all-gathers of the data-
+    sharded operands.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_rep is not None:
+            kw["check_rep"] = check_rep
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+        except TypeError:
+            # newest releases renamed check_rep → check_vma
+            if "check_rep" in kw:
+                kw["check_vma"] = kw.pop("check_rep")
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    base_kw = {"check_rep": check_rep} if check_rep is not None else {}
+    auto = frozenset()
+    if axis_names is not None and mesh is not None:
+        # size-1 axes are semantically irrelevant (replicated == auto)
+        auto = frozenset(
+            a for a in mesh.axis_names
+            if a not in set(axis_names) and dict(mesh.shape).get(a, 1) > 1
+        )
+    if not auto:
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   **base_kw)
+
+    # replication checking is rejected alongside auto axes
+    auto_kw = dict(base_kw, auto=auto, check_rep=False)
+    fn_auto = _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **auto_kw)
+    fn_manual = _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    **base_kw)
+
+    def call(*args):
+        # 0.4.x partial-auto support is incomplete; keep the unlisted axes
+        # GSPMD-automatic when possible, else fall back to fully-manual
+        # (correct, possibly paying replication of the unlisted axes).
+        try:
+            return fn_auto(*args)
+        except NotImplementedError:
+            return fn_manual(*args)
+
+    return call
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` fallback: psum(1) over the named axis."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` fallback: a no-op where replication tracking
+    doesn't exist (old shard_map has no varying-axis type system)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def ambient_mesh():
+    """The mesh of the enclosing ``with mesh:`` / use-mesh context, or None.
+
+    The launchers use the legacy ``with mesh:`` context, which newer
+    shard_map's context-mesh lookup doesn't see — and older JAX has no
+    ``get_abstract_mesh`` at all.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        mesh = get_abstract()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    from jax._src import mesh as _mesh_lib
+
+    phys = _mesh_lib.thread_resources.env.physical_mesh
+    return phys if not phys.empty else None

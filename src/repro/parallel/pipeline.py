@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel import compat as _compat
+
 Array = jax.Array
 
 
@@ -36,7 +38,7 @@ def _pipeline_local(params_local, x_mb: Array, *, body: Callable,
     x_mb: (M, mb, ...) microbatches — input on stage 0, ignored elsewhere.
     Returns (M, mb, ...) outputs — valid on the LAST stage.
     """
-    n = jax.lax.axis_size(axis)
+    n = _compat.axis_size(axis)
     stage = jax.lax.axis_index(axis)
     M = num_microbatches
     ticks = M + n - 1
@@ -67,8 +69,8 @@ def _pipeline_local(params_local, x_mb: Array, *, body: Callable,
         return (in_buf_next, outputs), None
 
     init = (
-        jax.lax.pvary(zeros, (axis,)),
-        jax.lax.pvary(jnp.zeros_like(x_mb), (axis,)),
+        _compat.pvary(zeros, (axis,)),
+        _compat.pvary(jnp.zeros_like(x_mb), (axis,)),
     )
     (_, outputs), _ = jax.lax.scan(tick_fn, init, jnp.arange(ticks))
     # broadcast the last stage's outputs to every stage (tiny psum trick:
@@ -97,14 +99,9 @@ def pipeline_forward(
     x_mb = x.reshape((num_microbatches, B // num_microbatches) + x.shape[1:])
 
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
-            from jax._src import mesh as _mesh_lib
+        mesh = _compat.ambient_mesh()
 
-            phys = _mesh_lib.thread_resources.env.physical_mesh
-            mesh = phys if not phys.empty else None
-
-    fn = jax.shard_map(
+    fn = _compat.shard_map(
         functools.partial(
             _pipeline_local, body=body, axis=axis,
             num_microbatches=num_microbatches,

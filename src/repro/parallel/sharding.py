@@ -206,3 +206,18 @@ def kv_cache_sharding(mesh: Mesh, batch: int, cache_len: int, kv_heads: int):
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def sample_state_shardings(mesh: Mesh, batch: int, state_ndim: int):
+    """Shardings for the adaptive-sampling carry (DESIGN.md §3).
+
+    Returns ``(array, vector, replicated)`` NamedShardings: ``array`` for
+    (B, ...) state tensors (x, x'_prev, noise), ``vector`` for per-sample
+    (B,) scalars (t, h, nfe, accept/reject counters), ``replicated`` for
+    the PRNG key and loop counters. The batch axis shards over the mesh's
+    data axes when divisible; otherwise everything replicates, so the
+    caller never has to special-case indivisible batches.
+    """
+    arr = batch_sharding(mesh, batch, state_ndim)
+    vec = NamedSharding(mesh, P(arr.spec[0] if len(arr.spec) else None))
+    return arr, vec, replicated(mesh)

@@ -7,9 +7,17 @@ slot batch of Algorithm-1 state, and whenever a slot's t reaches t_eps,
 deliver the image and refill the slot with a fresh prior draw for the
 next request — no request ever waits for the batch's slowest sample.
 
-Throughput math: naive batched sampling costs max_i NFE_i per batch of
-requests; slot refill costs ~mean_i NFE_i — the gap grows with the
-per-sample NFE spread the paper's adaptivity creates.
+Throughput math (DESIGN.md §4): naive batched sampling costs max_i NFE_i
+per batch of requests; slot refill costs ~mean_i NFE_i — the gap grows
+with the per-sample NFE spread the paper's adaptivity creates.
+
+Mesh scale-out (DESIGN.md §3): pass ``mesh=`` to shard the slot batch
+over the mesh's data axes. Each device then owns a contiguous block of
+``slots / device_count`` slots, the jit'd step runs fully data-parallel
+(no resharding, no cross-device traffic in the elementwise math), and
+slot refill remains per-slot — i.e. it happens independently on every
+device, so one device's finished slots never stall another device's
+in-flight samples. ``refills_per_device`` records that independence.
 
 Device step = repro.launch.sample.make_sample_step (the same unit the
 production-mesh dry-run lowers); the host loop only watches t and swaps
@@ -53,13 +61,36 @@ class DiffusionBatcher:
         *,
         slots: int = 8,
         cfg: AdaptiveConfig | None = None,
+        mesh=None,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
         self.params = params
         self.n = slots
         self.shape = tuple(sample_shape)
-        self.step_fn = jax.jit(sample_step)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.parallel.sharding import data_axes, sample_state_shardings
+
+            axes = data_axes(mesh)
+            self.n_devices = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+            if slots % self.n_devices != 0:
+                raise ValueError(
+                    f"slots={slots} must divide across {self.n_devices} devices"
+                )
+            arr_s, vec_s, rep_s = sample_state_shardings(
+                mesh, slots, 1 + len(self.shape)
+            )
+            self._state_shardings = (arr_s, arr_s, vec_s, vec_s, rep_s)
+            self.step_fn = jax.jit(sample_step, out_shardings=self._state_shardings)
+        else:
+            self.n_devices = 1
+            self._state_shardings = None
+            self.step_fn = jax.jit(sample_step)
+        self.slots_per_device = slots // self.n_devices
+        #: per-device count of queue→slot assignments (includes the
+        #: initial fill); shows refill proceeding independently per device
+        self.refills_per_device: List[int] = [0] * self.n_devices
         self.queue: Deque[ImageRequest] = deque()
         self.finished: Dict[int, ImageRequest] = {}
         self._slot_req: List[Optional[ImageRequest]] = [None] * slots
@@ -71,6 +102,18 @@ class DiffusionBatcher:
             jnp.full((B,), self.cfg.h_init, jnp.float32),
             jax.random.PRNGKey(0),
         )
+        self._state = self._shard_state(self._state)
+
+    def _shard_state(self, state):
+        if self._state_shardings is None:
+            return state
+        return tuple(
+            jax.device_put(a, s) for a, s in zip(state, self._state_shardings)
+        )
+
+    def slot_device(self, slot: int) -> int:
+        """Mesh data-axis index owning ``slot`` (contiguous block layout)."""
+        return slot // self.slots_per_device
 
     def submit(self, req: ImageRequest) -> None:
         self.queue.append(req)
@@ -94,6 +137,7 @@ class DiffusionBatcher:
             if self._slot_req[i] is None and self.queue:
                 req = self.queue.popleft()
                 self._slot_req[i] = req
+                self.refills_per_device[self.slot_device(i)] += 1
                 k = jax.random.PRNGKey(req.seed)
                 x = x.at[i].set(
                     self.sde.prior_sample(k, self.shape).astype(x.dtype))
@@ -103,7 +147,7 @@ class DiffusionBatcher:
                                     self.sde.T - self.sde.t_eps))
                 changed = True
         if changed or x_host is not None:
-            self._state = (x, xp, t, h, key)
+            self._state = self._shard_state((x, xp, t, h, key))
 
     def step(self) -> int:
         """One device step; returns number of busy slots."""
