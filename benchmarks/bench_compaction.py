@@ -1,0 +1,128 @@
+"""Slot compaction vs the monolithic batched loop (DESIGN.md §7).
+
+The paper's per-sample step sizes make batched sampling finish raggedly;
+the monolithic while_loop keeps the whole batch stepping until the
+slowest sample converges, so finished samples burn score-network FLOPs
+as frozen passengers. This bench drives the *same* horizon-chunked
+device step through the ``DiffusionBatcher`` under both turnover
+disciplines:
+
+  * ``monolithic``  — ``compaction=False``: the batch only turns over
+    when every occupied slot has converged (the paper's "wait for all
+    images" loop);
+  * ``compaction``  — ``compaction=True``: converged slots retire and
+    refill from the queue at every sync horizon.
+
+Traffic is a timed trickle: a wave of ``max(1, round(o·slots))``
+requests is released every ~one mean service time, where ``o`` is the
+occupancy level (1.0 = saturating, 0.1 = light). Metrics per mode:
+
+  * ``passenger_nfe`` — frozen-passenger waste: the fraction of
+    evaluations issued to *occupied* slots whose sample had already
+    converged. This is the acceptance gate (≥1.5× lower with compaction
+    at o=0.1): it is the waste only slot turnover discipline can remove.
+  * ``wasted_nfe``   — total waste including never-occupied idle slots.
+    Idle capacity is a provisioning question — both disciplines pay it
+    identically at light traffic — reported for transparency.
+  * wall-clock and samples/s.
+
+Low sample dimension on purpose: the ℓ2 scaled error concentrates at
+high d (paper Sec. 3.1.3; the repo's dimensionality bench quantifies
+it), so the per-sample NFE spread — the raggedness compaction exploits —
+is widest in the low-d regime (iters ≈ 70–125 at d=2 vs ±8% at d=64).
+
+  PYTHONPATH=src python -m benchmarks.bench_compaction [--slots 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import AdaptiveConfig, VPSDE
+from repro.core.analytic import gaussian_noise_pred
+from repro.launch.sample import make_sample_step
+from repro.models.dit import DiTConfig
+from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+MU, S0 = 0.3, 0.5
+DIM = 2
+WAVES = 5
+WAVE_GAP_ITERS = 100  # ≈ one mean service time at eps_rel=0.05, d=2
+SYNC_HORIZON = 4
+OCCUPANCIES = (1.0, 0.5, 0.1)
+
+
+def _make_step(sde, cfg):
+    net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
+                    num_heads=1, d_ff=8)  # signature holder; forward_fn wins
+    return make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde, MU, S0))
+
+
+def _run(sde, cfg, step, slots: int, occupancy: float, compaction: bool):
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(DIM,),
+                         slots=slots, cfg=cfg, sync_horizon=SYNC_HORIZON,
+                         compaction=compaction)
+    # compile this batcher's jitted chunk outside the timed region (an
+    # all-idle carry makes the chunk a no-op, so state is unchanged)
+    b._carry = b.step_fn(b.params, b._carry)
+    wave_size = max(1, round(occupancy * slots))
+    n_total = WAVES * wave_size
+    uid = 0
+    released = 0
+    t0 = time.perf_counter()
+    while len(b.finished) < n_total:
+        # timed arrivals: wave w is released WAVE_GAP_ITERS·w device
+        # iterations into the run (time advances only while work runs,
+        # so an idle batch skips straight to the next wave)
+        while released < WAVES and (
+            b.total_iterations >= released * WAVE_GAP_ITERS
+            or (not b.queue and all(r is None for r in b._slot_req))
+        ):
+            for _ in range(wave_size):
+                b.submit(ImageRequest(uid=uid, seed=uid))
+                uid += 1
+            released += 1
+        if b.step() == 0:
+            b._sync()
+    dt = time.perf_counter() - t0
+    assert len(b.finished) == n_total
+    return {
+        "passenger": b.passenger_nfe_fraction,
+        "wasted": b.wasted_nfe_fraction,
+        "iters": b.total_iterations,
+        "wall_s": dt,
+        "sps": n_total / dt,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=16)
+    args = ap.parse_args(argv)
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    step = _make_step(sde, cfg)
+
+    for occ in OCCUPANCIES:
+        mono = _run(sde, cfg, step, args.slots, occ, compaction=False)
+        comp = _run(sde, cfg, step, args.slots, occ, compaction=True)
+        ratio = mono["passenger"] / max(comp["passenger"], 1e-9)
+        for mode, r in (("monolithic", mono), ("compaction", comp)):
+            emit(
+                f"compaction/occ{occ}/{mode}",
+                r["wall_s"] * 1e6,
+                f"passenger_nfe={r['passenger']:.3f};"
+                f"wasted_nfe={r['wasted']:.3f};iters={r['iters']};"
+                f"samples_per_s={r['sps']:.2f}",
+            )
+        emit(f"compaction/occ{occ}/ratio", 0.0,
+             f"passenger_nfe_mono_over_comp={ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ import sys
 import time
 
 from . import (
+    bench_compaction,
     bench_dimensionality,
     bench_kernels,
     bench_serving,
@@ -30,6 +31,7 @@ SUITES = {
     "kernels": bench_kernels.main,
     "serving": bench_serving.main,
     "sharded_sampling": bench_sharded_sampling.main,  # 1-vs-N device scaling
+    "compaction": bench_compaction.main,   # slot compaction vs monolithic
 }
 
 

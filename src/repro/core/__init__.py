@@ -11,25 +11,30 @@ from repro.core.solvers import (
     AdaptiveConfig,
     ForwardAdaptiveConfig,
     SolveResult,
+    SolverCarry,
     adaptive,
     adaptive_forward,
     available_solvers,
     ddim,
     euler_maruyama,
+    finalize,
     get_solver,
+    init_carry,
     predictor_corrector,
     probability_flow_rk45,
+    solve_chunk,
 )
 from repro.core.likelihood import bits_per_dim, log_likelihood
 from repro.core.losses import dsm_loss, make_loss_fn
-from repro.core.sampling import sample, sample_chunked
+from repro.core.sampling import sample, sample_chunked, solve_in_chunks
 
 __all__ = [
     "SDE", "VESDE", "VPSDE", "SubVPSDE", "get_sde",
-    "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult",
+    "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult", "SolverCarry",
     "adaptive", "adaptive_forward", "available_solvers", "ddim",
-    "euler_maruyama", "get_solver", "predictor_corrector",
-    "probability_flow_rk45", "dsm_loss", "make_loss_fn",
+    "euler_maruyama", "finalize", "get_solver", "init_carry",
+    "predictor_corrector", "probability_flow_rk45", "solve_chunk",
+    "dsm_loss", "make_loss_fn",
     "bits_per_dim", "log_likelihood",
-    "sample", "sample_chunked",
+    "sample", "sample_chunked", "solve_in_chunks",
 ]

@@ -1,0 +1,45 @@
+"""Closed-form scores for Gaussian data — the test/bench workhorse.
+
+For data x0 ~ N(mu, s0² I) under any linear-drift SDE with transition
+kernel N(m(t)·x0, std(t)² I), the time-t marginal is Gaussian in closed
+form:
+
+    x_t ~ N(m(t)·mu, m(t)²·s0² + std(t)²)
+
+so the exact score is available without a network. Every conformance
+test, serving test, self-test, and benchmark that needs an exact score
+uses these two factories instead of re-deriving the formula inline.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.sde import SDE
+
+Array = jax.Array
+
+
+def gaussian_score(sde: SDE, mu: float = 0.3, s0: float = 0.5):
+    """Exact score ∇log p_t for x0 ~ N(mu, s0² I); t is a (B,) vector."""
+
+    def score(x: Array, t: Array) -> Array:
+        m, std = sde.marginal(t)
+        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
+        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
+        return -(x - m * mu) / (m * m * s0 * s0 + std * std)
+
+    return score
+
+
+def gaussian_noise_pred(sde: SDE, mu: float = 0.3, s0: float = 0.5):
+    """The same exact score as a ``forward_fn(params, x, t)`` in
+    ``make_sample_step``'s noise-prediction convention (score = -out/std).
+    ``params`` is ignored — the score is analytic."""
+    score = gaussian_score(sde, mu, s0)
+
+    def forward_fn(params, x: Array, t: Array) -> Array:
+        _, std = sde.marginal(t)
+        return -score(x, t) * std.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    return forward_fn

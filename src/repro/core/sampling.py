@@ -7,6 +7,13 @@ axis of the prior draw, the solver's while-loop carry, and every score-
 network forward pass over the mesh's data axes — batched reverse-SDE
 sampling is embarrassingly data-parallel, so this is pure throughput.
 Samples are bit-identical sharded vs unsharded for a fixed key.
+
+``solve_in_chunks()`` is the resumable form (DESIGN.md §7): the same
+adaptive solve, but executed as a chain of ``solve_chunk`` calls of at
+most ``max_sync_iters`` device iterations each, with control returning
+to the host between chunks. Bit-identical to ``sample(method=
+'adaptive')`` for a fixed key — the serving loop uses exactly this
+yield structure to retire converged slots mid-flight.
 """
 
 from __future__ import annotations
@@ -19,6 +26,9 @@ import jax.numpy as jnp
 
 from repro.core.sde import SDE
 from repro.core.solvers import SolveResult, get_solver
+from repro.core.solvers.adaptive import (
+    AdaptiveConfig, _resolve_config, finalize, init_carry, solve_chunk,
+)
 
 Array = jax.Array
 
@@ -57,6 +67,62 @@ def sample(
         if "sharding" in inspect.signature(solver).parameters:
             solver_kwargs.setdefault("sharding", arr_s)
     return solver(sde, score_fn, x_init, k_solve, denoise=denoise, **solver_kwargs)
+
+
+def solve_in_chunks(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    shape,
+    key: Array,
+    *,
+    max_sync_iters: int,
+    config: AdaptiveConfig | None = None,
+    denoise: bool = True,
+    mesh=None,
+    on_sync: Callable | None = None,
+    chunk_fn: Callable | None = None,
+    **overrides,
+) -> SolveResult:
+    """Adaptive solve as a host-driven chain of bounded device chunks.
+
+    Each chunk runs at most ``max_sync_iters`` Algorithm-1 iterations
+    device-side, then yields the ``SolverCarry`` to the host;
+    ``on_sync(carry)`` (if given) observes every intermediate carry —
+    the hook the serving loop replaces with slot compaction. The final
+    result is bit-identical to the monolithic ``sample(method=
+    'adaptive')`` for the same key.
+
+    Each call jits a fresh chunk closure (one trace+compile per call).
+    Callers invoking this repeatedly with the same configuration should
+    pass ``chunk_fn`` — a prebuilt jitted ``carry -> carry`` chunk (what
+    the serving loop does via ``make_sample_step``) — to amortize the
+    compile across calls.
+    """
+    cfg = _resolve_config(config, overrides)
+    k_prior, k_solve = jax.random.split(key)
+    x_init = sde.prior_sample(k_prior, shape)
+    sharding = None
+    if mesh is not None:
+        from repro.parallel.sharding import sample_state_shardings
+
+        sharding, _, _ = sample_state_shardings(mesh, shape[0], len(shape))
+        x_init = jax.lax.with_sharding_constraint(x_init, sharding)
+    carry = init_carry(sde, x_init, k_solve, config=cfg, sharding=sharding)
+    chunk = chunk_fn or jax.jit(
+        lambda c: solve_chunk(
+            sde, score_fn, c,
+            max_sync_iters=max_sync_iters, config=cfg, sharding=sharding,
+        )
+    )
+    while bool(jnp.any(carry.t > sde.t_eps + 1e-12)) and (
+        int(carry.iterations) < cfg.max_iters
+    ):
+        carry = chunk(carry)
+        if on_sync is not None:
+            on_sync(carry)
+    return jax.jit(
+        lambda c: finalize(sde, score_fn, c, denoise=denoise)
+    )(carry)
 
 
 def sample_chunked(

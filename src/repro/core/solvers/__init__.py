@@ -2,13 +2,23 @@
 
 from .base import SolveResult, available_solvers, get_solver, register_solver
 from .euler_maruyama import euler_maruyama
-from .adaptive import AdaptiveConfig, ForwardAdaptiveConfig, adaptive, adaptive_forward
+from .adaptive import (
+    AdaptiveConfig,
+    ForwardAdaptiveConfig,
+    SolverCarry,
+    adaptive,
+    adaptive_forward,
+    finalize,
+    init_carry,
+    solve_chunk,
+)
 from .predictor_corrector import predictor_corrector
 from .probability_flow import probability_flow_rk45
 from .ddim import ddim
 
 __all__ = [
     "SolveResult",
+    "SolverCarry",
     "available_solvers",
     "get_solver",
     "register_solver",
@@ -17,6 +27,9 @@ __all__ = [
     "ForwardAdaptiveConfig",
     "adaptive",
     "adaptive_forward",
+    "finalize",
+    "init_carry",
+    "solve_chunk",
     "predictor_corrector",
     "probability_flow_rk45",
     "ddim",

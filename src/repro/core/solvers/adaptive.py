@@ -11,6 +11,15 @@ pass; finished samples ride along with masked (frozen) state, exactly
 the "wait for all images to converge" semantics of paper Sec. 3.1.5 but
 without host round-trips.
 
+Resumable solve (DESIGN.md §7): the loop state is the public
+``SolverCarry`` pytree and the loop itself is exposed as
+``solve_chunk(carry, max_sync_iters)`` — up to ``max_sync_iters`` body
+iterations device-side, then control returns to the host with the carry
+intact. Chaining chunks is bit-identical to the monolithic solve
+(``adaptive()`` is itself one maximal chunk), which is what lets the
+serving loop retire converged slots and admit fresh requests at every
+sync horizon instead of keeping stragglers' seatmates frozen.
+
 The post-score elementwise arithmetic of one step (two Euler forms,
 extrapolated average, mixed tolerance, scaled ℓ2 error) is available in
 two numerically identical implementations:
@@ -116,60 +125,122 @@ def _step_math_fused_sharded(
     )
 
 
-@register_solver("adaptive")
-def adaptive(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SolverCarry:
+    """Resumable state of an Algorithm-1 solve (one pytree, jit-safe).
+
+    Attributes:
+      x: current state, shape (B, ...).
+      x_prev: last accepted low-order proposal x' (mixed tolerance, Eq.5).
+      t: per-sample current time, shape (B,). t <= t_eps means converged;
+         t == 0.0 doubles as "idle slot" in the serving loop.
+      h: per-sample current step size, shape (B,).
+      key: PRNG state — either one shared key of shape (2,) (whole-batch
+         noise draw; what ``adaptive()`` uses, bit-identical to the
+         monolithic loop) or per-slot keys of shape (B, 2) (each sample
+         owns its noise stream, so the serving loop can move a sample
+         between slots or admit a new one without perturbing anyone
+         else's trajectory).
+      nfe / accepted / rejected: per-sample counters, shape (B,) int32.
+      done: per-sample convergence mask as of the last executed
+         iteration, shape (B,) bool.
+      iterations: total body iterations executed so far, scalar int32.
+    """
+
+    x: Array
+    x_prev: Array
+    t: Array
+    h: Array
+    key: Array
+    nfe: Array
+    accepted: Array
+    rejected: Array
+    done: Array
+    iterations: Array
+
+    @property
+    def batch(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def per_slot_keys(self) -> bool:
+        return self.key.ndim == 2
+
+
+def init_carry(
     sde: SDE,
-    score_fn: Callable[[Array, Array], Array],
     x_init: Array,
     key: Array,
     *,
     config: AdaptiveConfig | None = None,
-    denoise: bool = True,
     sharding=None,
     **overrides,
-) -> SolveResult:
-    """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively.
-
-    ``sharding`` (a batch-axis NamedSharding, normally produced by
-    ``repro.parallel.sharding.sample_state_shardings`` and threaded down
-    from ``sample(..., mesh=...)``) constrains every (B, ...) and (B,)
-    carry of the while loop so GSPMD keeps the whole loop — both score
-    evaluations, the step math, and the accept/adapt bookkeeping — data
-    parallel with zero resharding (DESIGN.md §3). Numerics are identical
-    to the unsharded run: the batch is embarrassingly parallel and the
-    PRNG is sharding-invariant.
-    """
-    cfg = config or AdaptiveConfig(**overrides)
-    if overrides and config is not None:
-        cfg = dataclasses.replace(config, **overrides)
-    eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
-
-    # a P() spec (fully replicated) has no leading entry — treat as None
-    batch_axes = (
-        sharding.spec[0] if sharding is not None and len(sharding.spec) else None
-    )
-    if sharding is not None:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-
-        vec_sharding = NamedSharding(sharding.mesh, P(batch_axes))
-        c_arr = lambda a: jax.lax.with_sharding_constraint(a, sharding)
-        c_vec = lambda v: jax.lax.with_sharding_constraint(v, vec_sharding)
-    else:
-        c_arr = c_vec = lambda a: a
-
+) -> SolverCarry:
+    """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot."""
+    cfg = _resolve_config(config, overrides)
+    c_arr, c_vec = _constraints(sharding)
     batch = x_init.shape[0]
-    x_init = c_arr(x_init)
     t0 = c_vec(jnp.full((batch,), sde.T, jnp.float32))
     h0 = c_vec(
         jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
     )
+    zeros = c_vec(jnp.zeros((batch,), jnp.int32))
+    x_init = c_arr(x_init)
+    return SolverCarry(
+        x=x_init,
+        x_prev=x_init,
+        t=t0,
+        h=h0,
+        key=key,
+        nfe=zeros,
+        accepted=zeros,
+        rejected=zeros,
+        done=c_vec(jnp.zeros((batch,), bool)),
+        iterations=jnp.asarray(0, jnp.int32),
+    )
 
-    if not cfg.use_fused_kernel:
-        step_math = _step_math_jnp
-    elif batch_axes is not None:
-        step_math = functools.partial(_step_math_fused_sharded, sharding=sharding)
-    else:
-        step_math = _step_math_fused
+
+def _resolve_config(config, overrides) -> AdaptiveConfig:
+    cfg = config or AdaptiveConfig(**overrides)
+    if overrides and config is not None:
+        cfg = dataclasses.replace(config, **overrides)
+    return cfg
+
+
+def _constraints(sharding):
+    """(c_arr, c_vec) sharding-constraint closures for (B, ...) / (B,)."""
+    if sharding is None or not len(sharding.spec):
+        # a P() spec (fully replicated) has no leading entry — treat as None
+        return (lambda a: a), (lambda v: v)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    vec_sharding = NamedSharding(sharding.mesh, P(sharding.spec[0]))
+    c_arr = lambda a: jax.lax.with_sharding_constraint(a, sharding)
+    c_vec = lambda v: jax.lax.with_sharding_constraint(v, vec_sharding)
+    return c_arr, c_vec
+
+
+def _draw_noise(key: Array, x: Array):
+    """Advance the PRNG and draw z ~ N(0, I) shaped like x.
+
+    Shared key (2,): one batched draw — the monolithic-loop convention.
+    Per-slot keys (B, 2): each sample's row comes from its own key, so
+    the draw is invariant to which slot the sample occupies.
+    """
+    if key.ndim == 1:
+        key, sub = jax.random.split(key)
+        return key, jax.random.normal(sub, x.shape, x.dtype)
+    pairs = jax.vmap(jax.random.split)(key)  # (B, 2, 2)
+    subs = pairs[:, 1]
+    z = jax.vmap(
+        lambda k: jax.random.normal(k, x.shape[1:], x.dtype)
+    )(subs)
+    return pairs[:, 0], z
+
+
+def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
+    """One Algorithm-1 iteration: SolverCarry → SolverCarry."""
 
     def em_coeffs(t, h):
         """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars)."""
@@ -177,24 +248,16 @@ def adaptive(
         g = sde.diffusion(t)
         return 1.0 - h * a, h * g * g, jnp.sqrt(h) * g
 
-    State = tuple  # (x, x_prev, t, h, key, nfe, acc, rej, iters)
-
-    def cond(s: State):
-        _, _, t, _, _, _, _, _, iters = s
-        return jnp.logical_and(
-            jnp.any(t > sde.t_eps + 1e-12), iters < cfg.max_iters
-        )
-
-    def body(s: State):
-        x, x_prev, t, h, key, nfe, acc, rej, iters = s
+    def body(s: SolverCarry) -> SolverCarry:
+        x, x_prev, t, h = s.x, s.x_prev, s.t, s.h
         active = t > sde.t_eps + 1e-12
         # Clamp the times fed to the score net for frozen samples.
         t_c = jnp.clip(t, sde.t_eps, sde.T)
         h_c = jnp.where(active, h, 0.0)
         t2 = jnp.clip(t_c - h_c, sde.t_eps, sde.T)
 
-        key, sub = jax.random.split(key)
-        z = c_arr(jax.random.normal(sub, x.shape, x.dtype))
+        key, z = _draw_noise(s.key, x)
+        z = c_arr(z)
 
         # --- low-order proposal: one reverse-EM step --------------------
         score1 = score_fn(x, t_c)
@@ -227,29 +290,129 @@ def adaptive(
         h_new = c_vec(jnp.where(active, h_new, h))
 
         two = jnp.where(active, 2, 0).astype(jnp.int32)
-        return (
-            x_new,
-            x_prev_new,
-            t_new,
-            h_new,
-            key,
-            c_vec(nfe + two),
-            c_vec(acc + accept.astype(jnp.int32)),
-            c_vec(rej + jnp.logical_and(~accept, active).astype(jnp.int32)),
-            iters + 1,
+        return SolverCarry(
+            x=x_new,
+            x_prev=x_prev_new,
+            t=t_new,
+            h=h_new,
+            key=key,
+            nfe=c_vec(s.nfe + two),
+            accepted=c_vec(s.accepted + accept.astype(jnp.int32)),
+            rejected=c_vec(
+                s.rejected + jnp.logical_and(~accept, active).astype(jnp.int32)
+            ),
+            done=c_vec(t_new <= sde.t_eps + 1e-12),
+            iterations=s.iterations + 1,
         )
 
-    zeros = c_vec(jnp.zeros((batch,), jnp.int32))
-    init: State = (
-        x_init, x_init, t0, h0, key, zeros, zeros, zeros, jnp.asarray(0, jnp.int32)
-    )
-    x, _, _, _, key, nfe, acc, rej, iters = jax.lax.while_loop(cond, body, init)
+    return body
 
+
+def _pick_step_math(cfg: AdaptiveConfig, sharding):
+    batch_axes = (
+        sharding.spec[0] if sharding is not None and len(sharding.spec) else None
+    )
+    if not cfg.use_fused_kernel:
+        return _step_math_jnp
+    if batch_axes is not None:
+        return functools.partial(_step_math_fused_sharded, sharding=sharding)
+    return _step_math_fused
+
+
+def solve_chunk(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    carry: SolverCarry,
+    *,
+    max_sync_iters: int,
+    config: AdaptiveConfig | None = None,
+    sharding=None,
+    **overrides,
+) -> SolverCarry:
+    """Run at most ``max_sync_iters`` Algorithm-1 iterations device-side.
+
+    Stops early when every sample has converged (t <= t_eps) or the
+    solve's global ``cfg.max_iters`` budget is exhausted. Chaining
+    ``solve_chunk`` calls until ``carry.done.all()`` is bit-identical to
+    the monolithic ``adaptive()`` solve with the same key: the body is
+    the same function and the PRNG threading does not depend on where
+    chunk boundaries fall. This is the yield point the serving loop uses
+    to retire and refill slots between horizons (DESIGN.md §7).
+    """
+    cfg = _resolve_config(config, overrides)
+    eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
+    c_arr, c_vec = _constraints(sharding)
+    body = _make_body(
+        sde, score_fn, cfg, eps_abs, _pick_step_math(cfg, sharding), c_arr, c_vec
+    )
+    start = carry.iterations
+
+    def cond(s: SolverCarry):
+        return (
+            jnp.any(s.t > sde.t_eps + 1e-12)
+            & (s.iterations - start < max_sync_iters)
+            & (s.iterations < cfg.max_iters)
+        )
+
+    return jax.lax.while_loop(cond, body, carry)
+
+
+def finalize(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    carry: SolverCarry,
+    *,
+    denoise: bool = True,
+) -> SolveResult:
+    """SolveResult from a finished carry (+ the paper's Tweedie denoise)."""
+    x, nfe = carry.x, carry.nfe
     if denoise:
-        t = jnp.full((batch,), sde.t_eps)
+        t = jnp.full((carry.batch,), sde.t_eps)
         x = sde.tweedie_denoise(x, score_fn(x, t))
         nfe = nfe + 1
-    return SolveResult(x=x, nfe=nfe, iterations=iters, accepted=acc, rejected=rej)
+    return SolveResult(
+        x=x,
+        nfe=nfe,
+        iterations=carry.iterations,
+        accepted=carry.accepted,
+        rejected=carry.rejected,
+    )
+
+
+@register_solver("adaptive")
+def adaptive(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    x_init: Array,
+    key: Array,
+    *,
+    config: AdaptiveConfig | None = None,
+    denoise: bool = True,
+    sharding=None,
+    **overrides,
+) -> SolveResult:
+    """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively.
+
+    One maximal ``solve_chunk`` over a fresh ``SolverCarry`` — the
+    monolithic reference that horizon-chunked solves must reproduce
+    bit-for-bit.
+
+    ``sharding`` (a batch-axis NamedSharding, normally produced by
+    ``repro.parallel.sharding.sample_state_shardings`` and threaded down
+    from ``sample(..., mesh=...)``) constrains every (B, ...) and (B,)
+    carry of the while loop so GSPMD keeps the whole loop — both score
+    evaluations, the step math, and the accept/adapt bookkeeping — data
+    parallel with zero resharding (DESIGN.md §3). Numerics are identical
+    to the unsharded run: the batch is embarrassingly parallel and the
+    PRNG is sharding-invariant.
+    """
+    cfg = _resolve_config(config, overrides)
+    carry = init_carry(sde, x_init, key, config=cfg, sharding=sharding)
+    carry = solve_chunk(
+        sde, score_fn, carry,
+        max_sync_iters=cfg.max_iters, config=cfg, sharding=sharding,
+    )
+    return finalize(sde, score_fn, carry, denoise=denoise)
 
 
 # ---------------------------------------------------------------------------

@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from repro.analysis.hlo import collective_bytes_from_text, summarize_cost
 from repro.configs.diffusion import CIFAR_DIT, HIGHRES_DIT
 from repro.core import VESDE, VPSDE, AdaptiveConfig, sample
-from repro.core.solvers.adaptive import _step_math_jnp
+from repro.core.solvers.adaptive import SolverCarry, solve_chunk
 from repro.models.dit import DiTConfig, dit_forward, init_dit, make_score_fn
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -98,65 +98,32 @@ def _dit_param_shardings(params_abs, mesh, *, pipeline_axis=None):
 
 def make_sample_step(net: DiTConfig, sde, cfg: AdaptiveConfig,
                      forward_fn=None):
-    """One Algorithm-1 iteration as a pjit-able step function.
+    """Resumable Algorithm-1 chunk as a pjit-able step function.
 
-    state = (x, x_prev, t, h, key) per-sample; returns updated state.
-    This is the unit the serving loop repeats until all samples land at
-    t_eps — the distributed analog of the lax.while_loop body.
+    Returns ``step(params, carry, max_sync_iters=1) -> carry`` over the
+    solver's ``SolverCarry`` pytree — the exact ``solve_chunk`` body the
+    monolithic ``adaptive()`` runs, so serving inherits every solver
+    feature (fused kernel, per-slot keys, NFE accounting) and chaining
+    chunks reproduces the monolithic solve bit-for-bit. This is the unit
+    the serving loop repeats until all samples land at t_eps, retiring
+    and refilling slots at each sync horizon.
+
+    ``forward_fn(params, x, t)`` is noise-prediction: score = -out/std.
     """
     if forward_fn is None:
         forward_fn = lambda p, x, t: dit_forward(p, x, t, net)
 
-    def score_fn_factory(params):
-        def score(x, t):
+    def sample_step(params, carry, max_sync_iters: int = 1):
+        def score_fn(x, t):
             _, std = sde.marginal(t)
-            return -forward_fn(params, x, t) / std.reshape(-1, 1, 1, 1)
+            return -forward_fn(params, x, t) / std.reshape(
+                (-1,) + (1,) * (x.ndim - 1)
+            )
 
-        return score
-
-    eps_abs = float(sde.abs_tolerance)
-
-    def sample_step(params, state):
-        x, x_prev, t, h, key = state
-        score_fn = score_fn_factory(params)
-        key, sub = jax.random.split(key)
-        z = jax.random.normal(sub, x.shape, x.dtype)
-
-        active = t > sde.t_eps + 1e-12
-        t_c = jnp.clip(t, sde.t_eps, sde.T)
-        h_c = jnp.where(active, h, 0.0)
-        t2 = jnp.clip(t_c - h_c, sde.t_eps, sde.T)
-
-        def e(v):
-            return v.reshape(v.shape + (1,) * (x.ndim - 1))
-
-        s1 = score_fn(x, t_c)
-        a1 = sde.drift_coeff(t_c)
-        g1 = sde.diffusion(t_c)
-        x_prime = (
-            e(1.0 - h_c * a1) * x + e(h_c * g1 * g1) * s1
-            + e(jnp.sqrt(h_c) * g1) * z
+        return solve_chunk(
+            sde, score_fn, carry,
+            max_sync_iters=max_sync_iters, config=cfg,
         )
-        s2 = score_fn(x_prime, t2)
-        g2 = sde.diffusion(t2)
-        x_high, err = _step_math_jnp(
-            x, x_prime, s2, z, x_prev,
-            h_c * sde.drift_coeff(t2), h_c * g2 * g2, jnp.sqrt(h_c) * g2,
-            cfg, eps_abs,
-        )
-        accept = jnp.logical_and(err <= 1.0, active)
-        x = jnp.where(e(accept), x_high, x)
-        x_prev = jnp.where(e(accept), x_prime, x_prev)
-        t = jnp.where(accept, t - h_c, t)
-        from repro.core.tolerance import next_step_size
-
-        h = jnp.where(
-            active,
-            next_step_size(h, err, jnp.maximum(t - sde.t_eps, 0.0),
-                           safety=cfg.safety, r_exponent=cfg.r_exponent),
-            h,
-        )
-        return (x, x_prev, t, h, key)
 
     return sample_step
 
@@ -215,15 +182,11 @@ def make_pipelined_dit_forward(net: DiTConfig, *, num_microbatches: int = 4,
 
 
 def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     from repro.launch.mesh import make_production_mesh
-    from repro.parallel.sharding import data_axes
 
     net = HIGHRES_DIT  # 256×256×3, ~100M-param DiT
     sde = VESDE(sigma_max=50.0)  # paper's high-res process
     mesh = make_production_mesh(multi_pod=multi_pod)
-    axes = data_axes(mesh)
 
     if pipeline:
         assert multi_pod, "pipeline stages live on the pod axis (2-pod mesh)"
@@ -232,17 +195,21 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
     p_shard = _dit_param_shardings(
         params_abs, mesh, pipeline_axis="pod" if pipeline else None)
     shp = (batch, net.image_size, net.image_size, net.channels)
-    bs = NamedSharding(mesh, P(axes, None, None, None))
-    vs = NamedSharding(mesh, P(axes))
-    rep = NamedSharding(mesh, P())
-    state_abs = (
-        jax.ShapeDtypeStruct(shp, jnp.float32),
-        jax.ShapeDtypeStruct(shp, jnp.float32),
-        jax.ShapeDtypeStruct((batch,), jnp.float32),
-        jax.ShapeDtypeStruct((batch,), jnp.float32),
-        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    arr = lambda s, d=jnp.float32: jax.ShapeDtypeStruct(s, d)
+    state_abs = SolverCarry(
+        x=arr(shp), x_prev=arr(shp),
+        t=arr((batch,)), h=arr((batch,)),
+        key=arr((batch, 2), jnp.uint32),  # per-slot keys: the serving form
+        nfe=arr((batch,), jnp.int32),
+        accepted=arr((batch,), jnp.int32),
+        rejected=arr((batch,), jnp.int32),
+        done=arr((batch,), jnp.bool_),
+        iterations=arr((), jnp.int32),
     )
-    s_shard = (bs, bs, vs, vs, rep)
+    from repro.parallel.sharding import solver_carry_shardings
+
+    s_shard = solver_carry_shardings(mesh, batch, len(shp),
+                                     per_slot_keys=True)
 
     fwd = (make_pipelined_dit_forward(net, axis="pod") if pipeline else None)
     step = make_sample_step(net, sde, AdaptiveConfig(eps_rel=0.02),
@@ -265,12 +232,12 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
         "memory": {"peak_bytes": getattr(mem, "peak_memory_in_bytes", None)},
         "cost": cost,
         "collectives": coll,
-        "note": "one Algorithm-1 iteration (2 score-net fwd + step math)",
+        "note": "one Algorithm-1 chunk iteration (2 score-net fwd + step math)",
     }
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(
             OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"), "w") as f:
-        json.dump(rec, f, indent=1)
+        json.dump(rec, f, indent=1, sort_keys=True)  # stable key order across regenerations
     gb = 1024 ** 3
     print(f"[{rec['arch']} × {rec['shape']} × {rec['mesh']}] OK  "
           f"compile {rec['compile_s']}s  "
@@ -334,7 +301,7 @@ def dryrun_loop(batch: int = 256) -> dict:
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(
             OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"), "w") as f:
-        json.dump(rec, f, indent=1)
+        json.dump(rec, f, indent=1, sort_keys=True)  # stable key order across regenerations
     gb = 1024 ** 3
     print(f"[{rec['arch']} × {rec['shape']} × {rec['mesh']}] OK  "
           f"compile {rec['compile_s']}s  "

@@ -77,13 +77,17 @@ def serve_batch(
     return jnp.concatenate(out, axis=1)
 
 
-def serve_diffusion(*, slots: int, requests: int, image_size: int = 8) -> dict:
+def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
+                    sync_horizon: int = 4, compaction: bool = True) -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
     slot batch across it, and drains ``requests`` prior-seeded requests
-    through a small DiT score net. Returns (and prints) throughput plus
-    the per-device refill counts that evidence independent slot refill.
+    through a small DiT score net with the horizon-chunked solver:
+    ``sync_horizon`` Algorithm-1 iterations per host round-trip, with
+    converged slots retired and refilled at every sync (DESIGN.md §7).
+    Returns (and prints) throughput, the wasted-NFE fraction, and the
+    per-device refill counts that evidence shard-local compaction.
     """
     from repro.core import AdaptiveConfig, VPSDE
     from repro.launch.sample import make_sample_step
@@ -100,7 +104,8 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8) -> dict:
     step = make_sample_step(net, sde, cfg)
     b = DiffusionBatcher(sde, step, params,
                          (image_size, image_size, net.channels),
-                         slots=slots, cfg=cfg, mesh=mesh)
+                         slots=slots, cfg=cfg, mesh=mesh,
+                         sync_horizon=sync_horizon, compaction=compaction)
     for uid in range(requests):
         b.submit(ImageRequest(uid=uid, seed=uid))
     t0 = time.time()
@@ -111,14 +116,20 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8) -> dict:
         "devices": ndev,
         "slots": slots,
         "slots_per_device": b.slots_per_device,
+        "sync_horizon": sync_horizon,
+        "compaction": compaction,
         "completed": len(done),
         "samples_per_sec": len(done) / dt,
         "mean_nfe": sum(nfes) / len(nfes),
+        "total_iterations": b.total_iterations,
+        "wasted_nfe_fraction": b.wasted_nfe_fraction,
         "refills_per_device": list(b.refills_per_device),
     }
     print(f"diffusion serve: {rec['completed']}/{requests} requests in {dt:.1f}s "
           f"({rec['samples_per_sec']:.2f} samples/s) on {ndev} device(s), "
-          f"{b.slots_per_device} slots/device, mean NFE {rec['mean_nfe']:.0f}, "
+          f"{b.slots_per_device} slots/device, horizon {sync_horizon}, "
+          f"mean NFE {rec['mean_nfe']:.0f}, "
+          f"wasted NFE {rec['wasted_nfe_fraction']:.1%}, "
           f"refills/device {rec['refills_per_device']}")
     return rec
 
@@ -136,10 +147,16 @@ def main() -> None:
                     help="force N placeholder host devices (set pre-init)")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--sync-horizon", type=int, default=4,
+                    help="device iterations per host sync (diffusion mode)")
+    ap.add_argument("--no-compaction", action="store_true",
+                    help="monolithic-wave baseline: no mid-flight slot refill")
     args = ap.parse_args()
 
     if args.diffusion:
-        serve_diffusion(slots=args.slots, requests=args.requests)
+        serve_diffusion(slots=args.slots, requests=args.requests,
+                        sync_horizon=args.sync_horizon,
+                        compaction=not args.no_compaction)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

@@ -36,24 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AdaptiveConfig, VPSDE, sample
-
-MU, S0 = 0.3, 0.5  # Gaussian data distribution with a closed-form score
-
-
-def _analytic_score(sde):
-    def score(x, t):
-        m, std = sde.marginal(t)
-        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
-        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
-        return -(x - m * MU) / (m * m * S0 * S0 + std * std)
-
-    return score
+from repro.core.analytic import gaussian_noise_pred, gaussian_score
 
 
 def check_sample_equivalence(mesh, *, fused: bool) -> dict:
     """sample() sharded vs unsharded: same key ⇒ bit-identical output."""
     sde = VPSDE()
-    score = _analytic_score(sde)
+    score = gaussian_score(sde)
     shape = (2 * jax.device_count(), 64)
     cfg = AdaptiveConfig(eps_rel=0.05, use_fused_kernel=fused)
     key = jax.random.PRNGKey(0)
@@ -109,11 +98,7 @@ def check_batcher(mesh) -> dict:
 
     sde = VPSDE()
     cfg = AdaptiveConfig(eps_rel=0.05)
-    score = _analytic_score(sde)
-
-    def forward_fn(params, x, t):  # make_sample_step's noise-pred convention
-        _, std = sde.marginal(t)
-        return -score(x, t) * std.reshape((-1,) + (1,) * (x.ndim - 1))
+    forward_fn = gaussian_noise_pred(sde)
 
     net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
                     num_heads=1, d_ff=8)  # signature holder; forward_fn wins
@@ -121,13 +106,27 @@ def check_batcher(mesh) -> dict:
     ndev = jax.device_count()
     slots = 2 * ndev
     b = DiffusionBatcher(sde, step, params=None, sample_shape=(32,),
-                         slots=slots, cfg=cfg, mesh=mesh)
+                         slots=slots, cfg=cfg, mesh=mesh, sync_horizon=4)
     n_req = 6 * ndev
     for uid in range(n_req):
         b.submit(ImageRequest(uid=uid, seed=uid))
     done = b.run_to_completion()
     xs = np.stack([done[u].result for u in range(n_req)]) \
         if len(done) == n_req else np.zeros((1, 1))
+
+    # shard-locality + scheduling invariance: an unsharded batcher with a
+    # different horizon must deliver bit-identical per-request samples —
+    # per-slot keys make trajectories independent of slot placement,
+    # compaction permutations, and device count
+    b_ref = DiffusionBatcher(sde, step, params=None, sample_shape=(32,),
+                             slots=slots, cfg=cfg, sync_horizon=1)
+    for uid in range(n_req):
+        b_ref.submit(ImageRequest(uid=uid, seed=uid))
+    done_ref = b_ref.run_to_completion()
+    invariant = len(done_ref) == n_req and len(done) == n_req and all(
+        np.array_equal(done[u].result, done_ref[u].result)
+        for u in range(n_req)
+    )
     return {
         "all_completed": len(done) == n_req,
         "finite": bool(np.isfinite(xs).all()),
@@ -139,6 +138,8 @@ def check_batcher(mesh) -> dict:
             r > b.slots_per_device for r in b.refills_per_device
         ),
         "total_assignments_match": sum(b.refills_per_device) == n_req,
+        "wasted_nfe_fraction": b.wasted_nfe_fraction,
+        "scheduling_invariant": bool(invariant),
     }
 
 
@@ -164,6 +165,7 @@ def main() -> int:
         and results["batcher"]["finite"]
         and results["batcher"]["per_device_refill"]
         and results["batcher"]["total_assignments_match"]
+        and results["batcher"]["scheduling_invariant"]
     )
     results["ok"] = ok
     print(json.dumps(results))

@@ -6,9 +6,11 @@ from .sharding import (
     param_shardings,
     replicated,
     sample_state_shardings,
+    solver_carry_shardings,
 )
 
 __all__ = [
     "MODEL_AXIS", "batch_sharding", "data_axes", "kv_cache_sharding",
     "param_shardings", "replicated", "sample_state_shardings",
+    "solver_carry_shardings",
 ]

@@ -221,3 +221,23 @@ def sample_state_shardings(mesh: Mesh, batch: int, state_ndim: int):
     arr = batch_sharding(mesh, batch, state_ndim)
     vec = NamedSharding(mesh, P(arr.spec[0] if len(arr.spec) else None))
     return arr, vec, replicated(mesh)
+
+
+def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
+                           *, per_slot_keys: bool = False):
+    """A ``SolverCarry``-shaped pytree of NamedShardings (DESIGN.md §7).
+
+    ``state_ndim`` is the ndim of the (B, ...) state arrays. With
+    ``per_slot_keys`` the (B, 2) key array shards over the batch axis
+    alongside the state — each device owns its slots' noise streams, so
+    shard-local slot compaction never touches another device's PRNG —
+    otherwise the single (2,) key replicates.
+    """
+    from repro.core.solvers.adaptive import SolverCarry
+
+    arr, vec, rep = sample_state_shardings(mesh, batch, state_ndim)
+    key_s = batch_sharding(mesh, batch, 2) if per_slot_keys else rep
+    return SolverCarry(
+        x=arr, x_prev=arr, t=vec, h=vec, key=key_s,
+        nfe=vec, accepted=vec, rejected=vec, done=vec, iterations=rep,
+    )

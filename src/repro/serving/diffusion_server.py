@@ -7,21 +7,33 @@ slot batch of Algorithm-1 state, and whenever a slot's t reaches t_eps,
 deliver the image and refill the slot with a fresh prior draw for the
 next request — no request ever waits for the batch's slowest sample.
 
+Horizon-chunked solve (DESIGN.md §7): the device step is the solver's
+own ``solve_chunk`` over a ``SolverCarry`` with *per-slot* PRNG keys —
+``sync_horizon`` Algorithm-1 iterations run device-side per host
+round-trip, then the host retires converged slots, compacts survivors,
+and admits queued requests into the freed slots (fresh prior draw at
+t = T under the request's own key). Because every slot owns its noise
+stream, a sample's trajectory is invariant to which slot it occupies
+and to what its seatmates do — compaction and admission never perturb
+in-flight samples.
+
 Throughput math (DESIGN.md §4): naive batched sampling costs max_i NFE_i
 per batch of requests; slot refill costs ~mean_i NFE_i — the gap grows
-with the per-sample NFE spread the paper's adaptivity creates.
+with the per-sample NFE spread the paper's adaptivity creates. The
+``wasted_nfe_fraction`` property measures the residual waste: the share
+of issued score-net evaluations that served idle or already-converged
+slots.
 
 Mesh scale-out (DESIGN.md §3): pass ``mesh=`` to shard the slot batch
 over the mesh's data axes. Each device then owns a contiguous block of
-``slots / device_count`` slots, the jit'd step runs fully data-parallel
-(no resharding, no cross-device traffic in the elementwise math), and
-slot refill remains per-slot — i.e. it happens independently on every
-device, so one device's finished slots never stall another device's
-in-flight samples. ``refills_per_device`` records that independence.
+``slots / device_count`` slots and compaction is *shard-local*: slots
+are only ever permuted within their device's block, so no sample (or
+its PRNG key) ever crosses a shard boundary. ``refills_per_device``
+records the per-device admission counts.
 
-Device step = repro.launch.sample.make_sample_step (the same unit the
-production-mesh dry-run lowers); the host loop only watches t and swaps
-slots.
+Device step = repro.launch.sample.make_sample_step (the same
+``solve_chunk`` unit the production-mesh dry-run lowers); the host loop
+only watches t and swaps slots.
 """
 
 from __future__ import annotations
@@ -36,6 +48,7 @@ import numpy as np
 
 from repro.core import AdaptiveConfig
 from repro.core.sde import SDE
+from repro.core.solvers.adaptive import SolverCarry
 
 Array = jax.Array
 
@@ -47,21 +60,40 @@ class ImageRequest:
     result: Optional[np.ndarray] = None
     nfe: int = 0
     done: bool = False
+    #: device iterations spent occupying a slot (admission → retirement);
+    #: 2·resident_iters − nfe is this request's frozen-passenger waste
+    resident_iters: int = 0
+    _admit_iters: int = dataclasses.field(default=0, repr=False)
 
 
 class DiffusionBatcher:
-    """Slot-refilling sampler around a pjit-able Algorithm-1 step."""
+    """Slot-compacting sampler around a pjit-able ``solve_chunk`` step.
+
+    ``sync_horizon`` sets how many Algorithm-1 iterations run device-side
+    between host syncs (1 = the classic per-step loop; larger horizons
+    amortize host round-trips at the cost of up to horizon-1 iterations
+    of retirement latency per converged slot).
+
+    ``compaction=True`` (default) retires converged slots and admits
+    queued requests at every sync horizon. ``compaction=False`` is the
+    monolithic-wave baseline: the batch only turns over once *every*
+    occupied slot has converged — exactly the "wait for all images"
+    semantics of the paper's batched loop, kept for A/B measurement
+    (benchmarks/bench_compaction.py).
+    """
 
     def __init__(
         self,
         sde: SDE,
-        sample_step: Callable,  # (params, state) -> state (from make_sample_step)
+        sample_step: Callable,  # (params, carry, max_sync_iters=N) -> carry
         params,
         sample_shape,           # per-sample shape, e.g. (16, 16, 3)
         *,
         slots: int = 8,
         cfg: AdaptiveConfig | None = None,
         mesh=None,
+        sync_horizon: int = 1,
+        compaction: bool = True,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
@@ -69,8 +101,12 @@ class DiffusionBatcher:
         self.n = slots
         self.shape = tuple(sample_shape)
         self.mesh = mesh
+        self.sync_horizon = int(sync_horizon)
+        self.compaction = bool(compaction)
         if mesh is not None:
-            from repro.parallel.sharding import data_axes, sample_state_shardings
+            from repro.parallel.sharding import (
+                data_axes, solver_carry_shardings,
+            )
 
             axes = data_axes(mesh)
             self.n_devices = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
@@ -78,37 +114,56 @@ class DiffusionBatcher:
                 raise ValueError(
                     f"slots={slots} must divide across {self.n_devices} devices"
                 )
-            arr_s, vec_s, rep_s = sample_state_shardings(
-                mesh, slots, 1 + len(self.shape)
+            self._carry_shardings = solver_carry_shardings(
+                mesh, slots, 1 + len(self.shape), per_slot_keys=True
             )
-            self._state_shardings = (arr_s, arr_s, vec_s, vec_s, rep_s)
-            self.step_fn = jax.jit(sample_step, out_shardings=self._state_shardings)
+            self.step_fn = jax.jit(
+                lambda p, c: sample_step(p, c, max_sync_iters=self.sync_horizon),
+                out_shardings=self._carry_shardings,
+            )
         else:
             self.n_devices = 1
-            self._state_shardings = None
-            self.step_fn = jax.jit(sample_step)
+            self._carry_shardings = None
+            self.step_fn = jax.jit(
+                lambda p, c: sample_step(p, c, max_sync_iters=self.sync_horizon)
+            )
         self.slots_per_device = slots // self.n_devices
         #: per-device count of queue→slot assignments (includes the
-        #: initial fill); shows refill proceeding independently per device
+        #: initial fill); shows admission proceeding independently per device
         self.refills_per_device: List[int] = [0] * self.n_devices
         self.queue: Deque[ImageRequest] = deque()
         self.finished: Dict[int, ImageRequest] = {}
         self._slot_req: List[Optional[ImageRequest]] = [None] * slots
+        #: total device loop iterations executed (each costs 2 score-net
+        #: forwards over the full slot batch, busy or not)
+        self.total_iterations = 0
+        #: Σ per-request NFE actually delivered — the useful fraction of
+        #: 2 · slots · total_iterations issued evaluations
+        self.useful_nfe = 0
+        #: Σ 2·resident_iters over delivered requests: evaluations issued
+        #: to *occupied* slots (excludes never-occupied idle capacity)
+        self.resident_nfe = 0
         B = slots
-        self._state = (
-            jnp.zeros((B,) + self.shape, jnp.float32),   # x
-            jnp.zeros((B,) + self.shape, jnp.float32),   # x_prev
-            jnp.zeros((B,), jnp.float32),                # t (0 = idle)
-            jnp.full((B,), self.cfg.h_init, jnp.float32),
-            jax.random.PRNGKey(0),
+        zi = jnp.zeros((B,), jnp.int32)
+        self._carry = SolverCarry(
+            x=jnp.zeros((B,) + self.shape, jnp.float32),
+            x_prev=jnp.zeros((B,) + self.shape, jnp.float32),
+            t=jnp.zeros((B,), jnp.float32),    # 0 = idle/converged
+            h=jnp.full((B,), self.cfg.h_init, jnp.float32),
+            key=jnp.zeros((B, 2), jnp.uint32),  # per-slot noise streams
+            nfe=zi, accepted=zi, rejected=zi,
+            done=jnp.ones((B,), bool),
+            iterations=jnp.asarray(0, jnp.int32),
         )
-        self._state = self._shard_state(self._state)
+        self._carry = self._shard_carry(self._carry)
 
-    def _shard_state(self, state):
-        if self._state_shardings is None:
-            return state
-        return tuple(
-            jax.device_put(a, s) for a, s in zip(state, self._state_shardings)
+    # ------------------------------------------------------------------
+    def _shard_carry(self, carry: SolverCarry) -> SolverCarry:
+        if self._carry_shardings is None:
+            return jax.tree_util.tree_map(jnp.asarray, carry)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(jnp.asarray(a), s),
+            carry, self._carry_shardings,
         )
 
     def slot_device(self, slot: int) -> int:
@@ -118,54 +173,147 @@ class DiffusionBatcher:
     def submit(self, req: ImageRequest) -> None:
         self.queue.append(req)
 
-    def _refill(self) -> None:
-        x, xp, t, h, key = self._state
-        tn = np.asarray(t)
-        changed = False
-        x_host = None
-        for i in range(self.n):
-            if self._slot_req[i] is not None and tn[i] <= self.sde.t_eps + 1e-9:
-                # deliver (final Tweedie denoise is a host-side epilogue
-                # amortized per delivery — one extra NFE, as in the paper)
-                if x_host is None:
-                    x_host = np.asarray(x)
+    @property
+    def wasted_nfe_fraction(self) -> float:
+        """Fraction of issued score-net evaluations spent on idle or
+        already-converged slots so far (0 when nothing ran yet)."""
+        issued = 2 * self.n * self.total_iterations
+        if issued == 0:
+            return 0.0
+        return 1.0 - min(self.useful_nfe, issued) / issued
+
+    @property
+    def passenger_nfe_fraction(self) -> float:
+        """Fraction of evaluations issued to *occupied* slots whose sample
+        had already converged — the paper's frozen-passenger waste, the
+        part of ``wasted_nfe_fraction`` that only compaction (not capacity
+        provisioning) can remove. 0 when nothing was delivered yet."""
+        if self.resident_nfe == 0:
+            return 0.0
+        return 1.0 - min(self.useful_nfe, self.resident_nfe) / self.resident_nfe
+
+    # ------------------------------------------------------------------
+    def _sync(self) -> None:
+        """Host sync: retire converged slots, compact, admit from queue.
+
+        Only (B,)-sized bookkeeping and the *retired rows* of x cross the
+        device↔host boundary; the compaction permutation and slot
+        admissions are applied device-side (gather + row scatters), so
+        the big (B, ...) state never round-trips through the host.
+        """
+        c = self._carry
+        # the device's own convergence mask — using anything else (e.g. a
+        # host-side t threshold) can disagree with the loop's active mask
+        # and make retirement depend on the sync horizon
+        done = np.asarray(c.done)
+        occupied = [r is not None for r in self._slot_req]
+        conv = [occupied[i] and bool(done[i]) for i in range(self.n)]
+        if not self.compaction and occupied != conv and any(occupied):
+            # monolithic-wave baseline: the batch only turns over once
+            # every occupied slot has converged
+            return
+        if not any(conv) and not (self.queue and not all(occupied)):
+            return
+
+        # 1. deliver converged slots: transfer only those rows. Samples
+        #    are delivered at the t_eps state, pre-Tweedie-denoise — the
+        #    batcher holds only the fused sample_step, not a standalone
+        #    score_fn, so the paper's +1-NFE denoise epilogue is the
+        #    caller's (cf. sample()/finalize(denoise=True))
+        conv_idx = [i for i in range(self.n) if conv[i]]
+        if conv_idx:
+            rows = np.asarray(c.x[jnp.asarray(conv_idx)])
+            nfe = np.asarray(c.nfe)
+            for row, i in zip(rows, conv_idx):
                 req = self._slot_req[i]
-                req.result = x_host[i]
+                req.result = row
+                req.nfe = int(nfe[i])
                 req.done = True
+                req.resident_iters = self.total_iterations - req._admit_iters
                 self.finished[req.uid] = req
+                self.useful_nfe += int(nfe[i])
+                self.resident_nfe += 2 * req.resident_iters
                 self._slot_req[i] = None
+
+        # 2. shard-local compaction: within each device's contiguous slot
+        #    block, pack the surviving in-flight samples to the front.
+        #    Samples never cross a block (= shard) boundary, and each
+        #    sample's per-slot key moves with it, so trajectories are
+        #    unchanged by the permutation.
+        perm = np.arange(self.n)
+        if self.compaction:
+            for d in range(self.n_devices):
+                lo = d * self.slots_per_device
+                hi = lo + self.slots_per_device
+                block = list(range(lo, hi))
+                live = [i for i in block if self._slot_req[i] is not None]
+                free = [i for i in block if self._slot_req[i] is None]
+                perm[lo:hi] = live + free
+            self._slot_req = [self._slot_req[j] for j in perm]
+        permute = not np.array_equal(perm, np.arange(self.n))
+
+        # 3. admit queued requests into freed slots: fresh prior draw at
+        #    t = T under the request's own key — per-slot keys mean the
+        #    admission cannot perturb any in-flight trajectory
+        admit_pos, priors, noise_keys = [], [], []
+        for i in range(self.n):
             if self._slot_req[i] is None and self.queue:
                 req = self.queue.popleft()
                 self._slot_req[i] = req
+                req._admit_iters = self.total_iterations
                 self.refills_per_device[self.slot_device(i)] += 1
-                k = jax.random.PRNGKey(req.seed)
-                x = x.at[i].set(
-                    self.sde.prior_sample(k, self.shape).astype(x.dtype))
-                xp = xp.at[i].set(x[i])
-                t = t.at[i].set(self.sde.T)
-                h = h.at[i].set(min(self.cfg.h_init,
-                                    self.sde.T - self.sde.t_eps))
-                changed = True
-        if changed or x_host is not None:
-            self._state = self._shard_state((x, xp, t, h, key))
+                k_prior, k_noise = jax.random.split(jax.random.PRNGKey(req.seed))
+                admit_pos.append(i)
+                priors.append(self.sde.prior_sample(k_prior, self.shape))
+                noise_keys.append(k_noise)
+
+        # a retired-but-unrefilled slot needs no explicit marking: the
+        # device loop already left it at t ≤ t_eps with done=True, which
+        # is exactly the chunk predicate's idle state
+        def update(leaf, admit_val=None):
+            if permute:
+                leaf = jnp.take(leaf, jnp.asarray(perm), axis=0)
+            if admit_pos and admit_val is not None:
+                leaf = leaf.at[jnp.asarray(admit_pos)].set(admit_val)
+            return leaf
+
+        x_admit = jnp.stack(priors).astype(c.x.dtype) if admit_pos else None
+        h0 = min(self.cfg.h_init, self.sde.T - self.sde.t_eps)
+        self._carry = self._shard_carry(SolverCarry(
+            x=update(c.x, admit_val=x_admit),
+            x_prev=update(c.x_prev, admit_val=x_admit),
+            t=update(c.t, admit_val=jnp.float32(self.sde.T)),
+            h=update(c.h, admit_val=jnp.float32(h0)),
+            key=update(c.key,
+                       admit_val=jnp.stack(noise_keys) if admit_pos else None),
+            nfe=update(c.nfe, admit_val=jnp.int32(0)),
+            accepted=update(c.accepted, admit_val=jnp.int32(0)),
+            rejected=update(c.rejected, admit_val=jnp.int32(0)),
+            done=update(c.done, admit_val=False),
+            # the carry's iteration counter is per-chunk in serving: fold
+            # it into the host total and reset so cfg.max_iters never
+            # trips on a long-lived server
+            iterations=jnp.asarray(0, jnp.int32),
+        ))
 
     def step(self) -> int:
-        """One device step; returns number of busy slots."""
-        self._refill()
+        """One sync horizon (≤ sync_horizon device iterations); returns
+        the number of busy slots entering the chunk."""
+        self._sync()
         busy = sum(1 for r in self._slot_req if r is not None)
         if busy == 0:
             return 0
-        self._state = self.step_fn(self.params, self._state)
-        for i, r in enumerate(self._slot_req):
-            if r is not None:
-                r.nfe += 2
+        before = int(self._carry.iterations)
+        self._carry = self.step_fn(self.params, self._carry)
+        self.total_iterations += int(self._carry.iterations) - before
         return busy
 
     def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, ImageRequest]:
         steps = 0
         while (self.queue or any(r is not None for r in self._slot_req)) \
                 and steps < max_steps:
-            self.step()
+            if self.step() == 0 and not self.queue:
+                break
             steps += 1
-        self._refill()  # deliver stragglers
+        self._sync()  # deliver stragglers
         return self.finished

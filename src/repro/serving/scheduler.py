@@ -88,6 +88,14 @@ class ContinuousBatcher:
         # global step counter == cache.length; per-slot request start
         self._global_step = 0
         self._start_pos = np.zeros((slots,), np.int32)
+        # occupancy accounting, mirroring DiffusionBatcher's wasted-NFE
+        # metrics (DESIGN.md §7): every device step costs a full
+        # slots-wide forward whether slots are occupied or not. The LM
+        # decode step is inherently one token per host sync (the sampled
+        # token feeds the next step), so there is no horizon to chunk —
+        # but the waste metric is the same shape.
+        self.total_steps = 0
+        self.useful_steps = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -126,6 +134,15 @@ class ContinuousBatcher:
         else:
             self._next_input[i] = sampled
 
+    @property
+    def wasted_step_fraction(self) -> float:
+        """Fraction of issued slot-steps that served free slots — the
+        decode-side analog of DiffusionBatcher.wasted_nfe_fraction."""
+        issued = self.n_slots * self.total_steps
+        if issued == 0:
+            return 0.0
+        return 1.0 - self.useful_steps / issued
+
     # ------------------------------------------------------------------
     def step(self) -> int:
         """One device step for all slots; returns #active slots."""
@@ -133,6 +150,8 @@ class ContinuousBatcher:
         active = sum(0 if s.free else 1 for s in self.slots)
         if active == 0:
             return 0
+        self.total_steps += 1
+        self.useful_steps += active
         toks = jnp.asarray(self._next_input)[:, None]
         batch = {"tokens": toks, "start_pos": jnp.asarray(self._start_pos)}
         next_tok, self.state = self.step_fn(self.params, batch, self.state)

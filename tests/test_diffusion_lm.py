@@ -50,6 +50,7 @@ def test_generation_runs_with_adaptive_solver(setup, rng):
     assert float(res.mean_nfe) > 0
 
 
+@pytest.mark.slow
 def test_training_reduces_loss(setup, rng):
     """Short DSM training on a 2-token repeating language must reduce
     loss (the embedding geometry is learnable-free; only the net moves)."""

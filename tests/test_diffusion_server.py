@@ -1,6 +1,8 @@
 """Diffusion continuous batching: every request completes, samples land
-on the data distribution, and slot refill beats lockstep batching in
-device steps when per-sample NFE varies."""
+on the data distribution, slot refill beats lockstep batching, and the
+horizon-chunked compacting loop is scheduling-invariant (per-slot keys
+mean a sample's trajectory does not depend on its slot, its seatmates,
+or where the sync horizons fall)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core import AdaptiveConfig, VPSDE
+from repro.core.analytic import gaussian_noise_pred
 from repro.launch.sample import make_sample_step
 from repro.models.dit import DiTConfig
 from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
@@ -20,21 +23,19 @@ D = 32
 def server_parts():
     sde = VPSDE()
     cfg = AdaptiveConfig(eps_rel=0.05)
-
-    # analytic Gaussian score stands in for the net: make_sample_step only
-    # needs a forward_fn(params, x, t) — adapt signature.
-    def forward_fn(params, x, t):
-        m, std = sde.marginal(t)
-        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
-        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
-        score = -(x - m * MU) / (m * m * S0 * S0 + std * std)
-        # make_sample_step treats forward_fn as noise-pred: score = -out/std
-        return -score * std
-
+    # analytic Gaussian score stands in for the net, in make_sample_step's
+    # noise-pred forward_fn convention
     net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
                     num_heads=1, d_ff=8)  # unused shapes; signature holder
-    step = make_sample_step(net, sde, cfg, forward_fn=forward_fn)
+    step = make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde, MU, S0))
     return sde, cfg, step
+
+
+def _drain(b, n_req, seed0=0):
+    for uid in range(n_req):
+        b.submit(ImageRequest(uid=uid, seed=seed0 + uid))
+    return b.run_to_completion()
 
 
 def test_all_requests_complete_and_distribute(server_parts):
@@ -42,38 +43,89 @@ def test_all_requests_complete_and_distribute(server_parts):
     b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,), slots=4,
                          cfg=cfg)
     n_req = 12
-    for uid in range(n_req):
-        b.submit(ImageRequest(uid=uid, seed=uid))
-    done = b.run_to_completion()
+    done = _drain(b, n_req)
     assert len(done) == n_req
     xs = np.stack([done[u].result for u in range(n_req)])
     assert np.isfinite(xs).all()
     # pooled moments approach the data distribution (pre-denoise state)
     assert abs(xs.mean() - MU) < 0.12
     assert abs(xs.std() - S0) < 0.12
-    # every request did real work
+    # every request did real work, with exact device-side accounting
     assert min(done[u].nfe for u in range(n_req)) > 10
+    assert all(done[u].nfe % 2 == 0 for u in range(n_req))
 
 
 def test_refill_uses_fewer_steps_than_lockstep(server_parts):
-    """Slot refill: total device steps < (batches × slowest sample) that
-    lockstep batching would pay."""
+    """Slot refill: total device iterations < (batches × slowest sample)
+    that lockstep batching would pay."""
     sde, cfg, step = server_parts
     n_req, slots = 16, 4
     b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
                          slots=slots, cfg=cfg)
-    for uid in range(n_req):
-        b.submit(ImageRequest(uid=uid, seed=100 + uid))
-    steps = 0
-    while b.queue or any(r is not None for r in b._slot_req):
-        if b.step() == 0:
-            break
-        steps += 1
-    b._refill()
-    assert len(b.finished) == n_req
-    per_req_iters = [b.finished[u].nfe // 2 for u in range(n_req)]
+    done = _drain(b, n_req, seed0=100)
+    assert len(done) == n_req
+    per_req_iters = [done[u].nfe // 2 for u in range(n_req)]
     # lockstep: ceil(n/slots) batches, each paying its max
     groups = [per_req_iters[i:i + slots]
               for i in range(0, n_req, slots)]
     lockstep_steps = sum(max(g) for g in groups)
-    assert steps <= lockstep_steps
+    assert b.total_iterations <= lockstep_steps
+
+
+def test_horizon_and_compaction_scheduling_invariance(server_parts):
+    """Per-request samples are bit-identical across sync horizons and
+    with compaction on/off: per-slot keys decouple every trajectory from
+    slot placement and sync timing."""
+    sde, cfg, step = server_parts
+    n_req = 10
+
+    def run(**kw):
+        b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                             slots=4, cfg=cfg, **kw)
+        done = _drain(b, n_req)
+        assert len(done) == n_req
+        return b, np.stack([done[u].result for u in range(n_req)])
+
+    _, x_h1 = run(sync_horizon=1)
+    b_h8, x_h8 = run(sync_horizon=8)
+    b_off, x_off = run(sync_horizon=8, compaction=False)
+    np.testing.assert_array_equal(x_h1, x_h8)
+    np.testing.assert_array_equal(x_h8, x_off)
+    # and the monolithic-wave baseline pays more wasted work
+    assert b_off.total_iterations >= b_h8.total_iterations
+    assert b_off.wasted_nfe_fraction >= b_h8.wasted_nfe_fraction
+
+
+def test_compaction_packs_survivors_contiguously(server_parts):
+    """After each sync, occupied slots form a contiguous prefix of every
+    device block (single device here ⇒ prefix of the whole batch)."""
+    sde, cfg, step = server_parts
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=4, cfg=cfg, sync_horizon=4)
+    for uid in range(6):
+        b.submit(ImageRequest(uid=uid, seed=uid))
+    seen_occupancies = set()
+    while b.queue or any(r is not None for r in b._slot_req):
+        if b.step() == 0 and not b.queue:
+            break
+        flags = [r is not None for r in b._slot_req]
+        k = sum(flags)
+        seen_occupancies.add(k)
+        assert flags == [True] * k + [False] * (4 - k), flags
+    b._sync()
+    assert len(b.finished) == 6
+    assert max(seen_occupancies) == 4  # the batch actually filled up
+
+
+def test_wasted_nfe_accounting(server_parts):
+    """useful + wasted = issued: the wasted fraction is exactly the gap
+    between delivered per-request NFE and 2·slots·iterations."""
+    sde, cfg, step = server_parts
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=4, cfg=cfg, sync_horizon=4)
+    done = _drain(b, 8)
+    issued = 2 * 4 * b.total_iterations
+    useful = sum(done[u].nfe for u in range(8))
+    assert useful == b.useful_nfe
+    assert 0.0 <= b.wasted_nfe_fraction < 1.0
+    assert b.wasted_nfe_fraction == pytest.approx(1.0 - useful / issued)

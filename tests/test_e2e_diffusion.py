@@ -68,9 +68,9 @@ def test_trained_sampling_matches_data(trained_score, method, kw, rng):
     sde, gmm, cfg, params, apply_fn = trained_score
     res = jax.jit(
         lambda k: sample(sde, lambda x, t: apply_fn(params, x, t),
-                         (2048, 2), k, method=method, **kw)
+                         (1024, 2), k, method=method, **kw)
     )(rng)
-    data = gmm.sample(jax.random.fold_in(rng, 9), 2048)
+    data = gmm.sample(jax.random.fold_in(rng, 9), 1024)
     w2 = _w2_gaussianized(res.x, data)
     assert not bool(jnp.any(jnp.isnan(res.x)))
     assert w2 < 0.35, (method, w2)
@@ -82,15 +82,15 @@ def test_adaptive_beats_em_at_matched_nfe(trained_score, rng):
     sde, gmm, cfg, params, apply_fn = trained_score
     score = lambda x, t: apply_fn(params, x, t)
     res_ad = jax.jit(
-        lambda k: sample(sde, score, (2048, 2), k, method="adaptive",
+        lambda k: sample(sde, score, (1024, 2), k, method="adaptive",
                          eps_rel=0.05)
     )(rng)
     nfe = int(float(res_ad.mean_nfe))
     res_em = jax.jit(
-        lambda k: sample(sde, score, (2048, 2), k, method="em",
+        lambda k: sample(sde, score, (1024, 2), k, method="em",
                          n_steps=max(nfe // 2, 2))  # EM: 1 eval/step
     )(rng)
-    data = gmm.sample(jax.random.fold_in(rng, 9), 2048)
+    data = gmm.sample(jax.random.fold_in(rng, 9), 1024)
     w2_ad = _w2_gaussianized(res_ad.x, data)
     w2_em = _w2_gaussianized(res_em.x, data)
     assert w2_ad <= w2_em + 0.15, (w2_ad, w2_em, nfe)

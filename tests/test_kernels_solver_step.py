@@ -63,12 +63,10 @@ def test_error_step_multidim_state(rng):
 def test_fused_solver_matches_jnp_solver(rng):
     """Full Algorithm 1 with use_fused_kernel=True == jnp path."""
     from repro.core import VPSDE, sample
+    from repro.core.analytic import gaussian_score
 
     sde = VPSDE()
-
-    def score(x, t):
-        m, std = sde.marginal(t)
-        return -(x - m[:, None] * 0.3) / (m[:, None] ** 2 * 0.25 + std[:, None] ** 2)
+    score = gaussian_score(sde, 0.3, 0.5)
 
     r1 = jax.jit(lambda k: sample(sde, score, (32, 24), k, method="adaptive",
                                   eps_rel=0.02))(rng)
@@ -77,3 +75,61 @@ def test_fused_solver_matches_jnp_solver(rng):
     np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
                                rtol=1e-4, atol=1e-4)
     assert int(r1.iterations) == int(r2.iterations)
+
+
+@pytest.mark.parametrize("eps_rel", [0.02, 0.004], ids=["mild", "reject-heavy"])
+def test_fused_solver_parity_under_rejection(eps_rel, rng):
+    """Forced-rejection parity: with a tiny eps_rel the accept/reject mix
+    is rejection-dominated, and the fused kernel must walk the *exact*
+    same decision path as the jnp oracle — bit-identical per-sample
+    accepted/rejected/nfe counters at every chunk boundary and at the
+    end — with the states tightly close (the in-VMEM error reduction
+    sums in a different order, so x is allclose rather than bitwise)."""
+    from repro.core import (
+        AdaptiveConfig, VPSDE, finalize, init_carry, solve_chunk,
+    )
+    from repro.core.analytic import gaussian_score
+
+    sde = VPSDE()
+    score = gaussian_score(sde, 0.3, 0.5)
+
+    k_prior, k_solve = jax.random.split(rng)
+    x0 = sde.prior_sample(k_prior, (16, 24))
+    carries = {}
+    steps = {}
+    for fused in (False, True):
+        cfg = AdaptiveConfig(eps_rel=eps_rel, use_fused_kernel=fused)
+        carries[fused] = init_carry(sde, x0, k_solve, config=cfg)
+        steps[fused] = jax.jit(
+            lambda c, cfg=cfg: solve_chunk(sde, score, c, max_sync_iters=25,
+                                           config=cfg)
+        )
+    while bool(jnp.any(~carries[False].done)):
+        for fused in (False, True):
+            carries[fused] = steps[fused](carries[fused])
+        for name in ("nfe", "accepted", "rejected", "done"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(carries[False], name)),
+                np.asarray(getattr(carries[True], name)), err_msg=name,
+            )
+        # t and h follow err into next_step_size, and the kernel's in-VMEM
+        # reduction order perturbs err's last bits — tightly close, not
+        # bitwise (unlike the integer decision path above)
+        np.testing.assert_allclose(
+            np.asarray(carries[False].t), np.asarray(carries[True].t),
+            rtol=1e-5, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(carries[False].x), np.asarray(carries[True].x),
+            rtol=1e-4, atol=1e-4,
+        )
+    r_jnp = finalize(sde, score, carries[False], denoise=False)
+    r_fused = finalize(sde, score, carries[True], denoise=False)
+    # the mix genuinely contains both branches
+    rej, acc = int(r_jnp.rejected.sum()), int(r_jnp.accepted.sum())
+    assert rej > 0 and acc > 0
+    if eps_rel < 0.01:
+        assert rej / (rej + acc) > 0.2  # rejection-heavy regime
+    np.testing.assert_array_equal(np.asarray(r_jnp.nfe), np.asarray(r_fused.nfe))
+    np.testing.assert_allclose(np.asarray(r_jnp.x), np.asarray(r_fused.x),
+                               rtol=1e-4, atol=1e-4)

@@ -37,9 +37,12 @@ def test_gaussian_loglik_exact(sde, rng):
                                rtol=0.0, atol=0.15)
 
 
+@pytest.mark.slow
 def test_gmm_loglik_matches_closed_form(rng):
     """2-D 4-mode mixture with exact time-t score: PF-ODE likelihood ≈
-    the mixture's exact log-density."""
+    the mixture's exact log-density. (slow job: the RK45 likelihood
+    solve is the suite's priciest single integral; the Gaussian exact
+    and Hutchinson cases keep the fast tier covered)"""
     sde = VPSDE()
     gmm = GMM2D()
     score = gmm.score_at_time(sde)

@@ -28,7 +28,10 @@ def _teacher_forced(cfg, params, toks, cross=None):
     return logits
 
 
-@pytest.mark.parametrize("axis", ["model", "data,model"])
+@pytest.mark.parametrize("axis", [
+    "model",
+    pytest.param("data,model", marks=pytest.mark.slow),  # 2-axis variant
+])
 def test_flash_decode_matches_teacher_forcing(axis, rng):
     cfg = _dense_cfg()
     params = init_model(cfg, rng)

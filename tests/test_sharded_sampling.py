@@ -25,6 +25,7 @@ import numpy as np
 import pytest
 
 from repro.core import AdaptiveConfig, VPSDE, sample
+from repro.core.analytic import gaussian_noise_pred, gaussian_score
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -32,13 +33,7 @@ MU, S0 = 0.3, 0.5
 
 
 def _score(sde):
-    def score(x, t):
-        m, std = sde.marginal(t)
-        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
-        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
-        return -(x - m * MU) / (m * m * S0 * S0 + std * std)
-
-    return score
+    return gaussian_score(sde, MU, S0)
 
 
 # ---------------------------------------------------------------------------
@@ -106,15 +101,10 @@ def test_batcher_mesh_1device():
 
     sde = VPSDE()
     cfg = AdaptiveConfig(eps_rel=0.05)
-    score = _score(sde)
-
-    def forward_fn(params, x, t):
-        _, std = sde.marginal(t)
-        return -score(x, t) * std.reshape((-1,) + (1,) * (x.ndim - 1))
-
     net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
                     num_heads=1, d_ff=8)
-    step = make_sample_step(net, sde, cfg, forward_fn=forward_fn)
+    step = make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde, MU, S0))
     mesh = jax.make_mesh((1,), ("data",))
     b = DiffusionBatcher(sde, step, params=None, sample_shape=(16,),
                          slots=4, cfg=cfg, mesh=mesh)
@@ -155,6 +145,7 @@ def selftest_results():
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_selftest_sample_bitwise_equivalence(selftest_results):
     res = selftest_results
     assert res["devices"] >= 2
@@ -164,11 +155,13 @@ def test_selftest_sample_bitwise_equivalence(selftest_results):
         assert res[kind]["sharded_over_devices"], res
 
 
+@pytest.mark.slow
 def test_selftest_fused_kernel_sharding(selftest_results):
     assert selftest_results["fused_kernel"]["batch_sharded_bitwise"]
     assert selftest_results["fused_kernel"]["feature_sharded_close"]
 
 
+@pytest.mark.slow
 def test_selftest_batcher_per_device_refill(selftest_results):
     b = selftest_results["batcher"]
     assert b["all_completed"] and b["finite"]
@@ -177,3 +170,6 @@ def test_selftest_batcher_per_device_refill(selftest_results):
     assert b["per_device_refill"], b
     assert b["total_assignments_match"], b
     assert len(b["refills_per_device"]) == selftest_results["devices"]
+    # per-slot keys: identical per-request samples for sharded horizon-4
+    # vs unsharded horizon-1 serving (shard-local compaction is invisible)
+    assert b["scheduling_invariant"], b

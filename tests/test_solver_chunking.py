@@ -1,0 +1,196 @@
+"""Resumable-solver invariants (DESIGN.md §7).
+
+The horizon-chunked solve must be a pure re-chunking of the monolithic
+``adaptive()`` while_loop: same ops, same PRNG threading, so chaining
+``solve_chunk`` across any horizon is bit-identical to the one-shot
+solve. On top of that, Algorithm-1 accounting obeys exact invariants:
+``nfe == 2·(accepted+rejected) (+1 with denoise)``, counters are
+per-sample monotone across chunk boundaries, and rejections do not bias
+the driving noise (Algorithm 2 retains z across rejections).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdaptiveConfig,
+    ForwardAdaptiveConfig,
+    VPSDE,
+    adaptive_forward,
+    finalize,
+    init_carry,
+    sample,
+    solve_chunk,
+    solve_in_chunks,
+)
+from repro.core.analytic import gaussian_score
+
+MU, S0 = 0.3, 0.5
+
+
+def _score(sde):
+    return gaussian_score(sde, MU, S0)
+
+
+# ---------------------------------------------------------------------------
+# chunked ≡ monolithic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("horizon", [1, 7, 64])
+def test_chained_chunks_bitwise_match_monolithic(horizon, rng):
+    """The acceptance bar: fixed seed ⇒ solve_in_chunks(max_sync_iters=N)
+    equals adaptive() bit-for-bit, for any chunk size."""
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    mono = jax.jit(
+        lambda k: sample(sde, _score(sde), (8, 16), k, config=cfg)
+    )(rng)
+    chunked = solve_in_chunks(
+        sde, _score(sde), (8, 16), rng, max_sync_iters=horizon, config=cfg
+    )
+    for field in ("x", "nfe", "accepted", "rejected", "iterations"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(mono, field)), np.asarray(getattr(chunked, field)),
+            err_msg=field,
+        )
+
+
+def test_chunk_respects_horizon_and_done_mask(rng):
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.1)
+    k_prior, k_solve = jax.random.split(rng)
+    x0 = sde.prior_sample(k_prior, (4, 16))
+    carry = init_carry(sde, x0, k_solve, config=cfg)
+    assert not bool(carry.done.any())
+    step = jax.jit(
+        lambda c: solve_chunk(sde, _score(sde), c, max_sync_iters=5, config=cfg)
+    )
+    carry = step(carry)
+    assert int(carry.iterations) == 5  # nobody converges in 5 iterations
+    while bool(jnp.any(~carry.done)):
+        carry = step(carry)
+    # done ⇔ t at t_eps (the serving loop retires on exactly this mask)
+    assert bool(jnp.all(carry.t <= sde.t_eps + 1e-12))
+    res = finalize(sde, _score(sde), carry, denoise=False)
+    assert bool(jnp.all(jnp.isfinite(res.x)))
+
+
+def test_fused_kernel_chunking_matches_fused_monolithic(rng):
+    """Chunk boundaries are also transparent to the fused-kernel path."""
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05, use_fused_kernel=True)
+    mono = jax.jit(
+        lambda k: sample(sde, _score(sde), (4, 24), k, config=cfg)
+    )(rng)
+    chunked = solve_in_chunks(
+        sde, _score(sde), (4, 24), rng, max_sync_iters=9, config=cfg
+    )
+    np.testing.assert_array_equal(np.asarray(mono.x), np.asarray(chunked.x))
+    np.testing.assert_array_equal(np.asarray(mono.nfe), np.asarray(chunked.nfe))
+
+
+def test_per_slot_keys_match_shared_key_statistics(rng):
+    """A (B, 2) per-slot key carry solves to the same distribution (it
+    cannot be bitwise — the noise streams differ by construction)."""
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    k_prior, k_solve = jax.random.split(rng)
+    x0 = sde.prior_sample(k_prior, (128, 8))
+    keys = jax.random.split(k_solve, 128)  # (128, 2) per-slot
+    carry = init_carry(sde, x0, keys, config=cfg)
+    assert carry.per_slot_keys
+    carry = jax.jit(
+        lambda c: solve_chunk(
+            sde, _score(sde), c, max_sync_iters=cfg.max_iters, config=cfg
+        )
+    )(carry)
+    res = finalize(sde, _score(sde), carry, denoise=False)
+    m, s = sde.marginal(jnp.asarray(sde.t_eps))
+    assert float(res.x.mean()) == pytest.approx(float(m) * MU, abs=0.06)
+
+
+# ---------------------------------------------------------------------------
+# NFE / accounting invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("denoise", [False, True], ids=["raw", "denoise"])
+def test_nfe_identity(denoise, rng):
+    """nfe == 2·(accepted + rejected) (+1 for the Tweedie denoise)."""
+    sde = VPSDE()
+    res = jax.jit(
+        lambda k: sample(sde, _score(sde), (32, 8), k, method="adaptive",
+                         eps_rel=0.03, denoise=denoise)
+    )(rng)
+    want = 2 * (np.asarray(res.accepted) + np.asarray(res.rejected))
+    if denoise:
+        want = want + 1
+    np.testing.assert_array_equal(np.asarray(res.nfe), want)
+    # rejections happened, so the identity covers the reject branch too
+    assert int(res.rejected.sum()) > 0
+
+
+def test_counters_monotone_across_chunks(rng):
+    """Per-sample nfe/accepted/rejected are non-decreasing at every sync
+    horizon, and only grow for samples that were still active."""
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    k_prior, k_solve = jax.random.split(rng)
+    carry = init_carry(sde, sde.prior_sample(k_prior, (8, 16)), k_solve,
+                       config=cfg)
+    step = jax.jit(
+        lambda c: solve_chunk(sde, _score(sde), c, max_sync_iters=6, config=cfg)
+    )
+    for _ in range(10_000):
+        if not bool(jnp.any(~carry.done)):
+            break
+        prev = jax.tree_util.tree_map(np.asarray, carry)
+        carry = step(carry)
+        for name in ("nfe", "accepted", "rejected"):
+            now = np.asarray(getattr(carry, name))
+            before = getattr(prev, name)
+            assert (now >= before).all(), name
+            # frozen samples must not accrue anything
+            frozen = prev.done
+            assert (now[frozen] == before[frozen]).all(), name
+        assert (np.asarray(carry.nfe)
+                == 2 * (np.asarray(carry.accepted)
+                        + np.asarray(carry.rejected))).all()
+    assert bool(carry.done.all())
+
+
+def test_fixed_step_solvers_report_zero_reject_counters(rng):
+    sde = VPSDE()
+    for method, kw in [("em", dict(n_steps=20)), ("ddim", dict(n_steps=10))]:
+        res = sample(sde, _score(sde), (4, 8), rng, method=method, **kw)
+        assert int(res.rejected.sum()) == 0
+
+
+def test_rejection_retains_noise_without_bias(rng):
+    """Algorithm 2 keeps the Gaussian z across rejections. If a rejection
+    redrew z (the classic noise-bias bug: retrying until the error test
+    passes selects for small-|z| draws), the stationary variance of the
+    OU process would shrink. Force a rejection-heavy solve and check the
+    stationary distribution is still exact."""
+    lam, sigma = -1.0, 0.8
+    # large h_init + moderate tolerance: plenty of rejections while the
+    # solve still completes well before max_iters
+    cfg = ForwardAdaptiveConfig(eps_abs=2e-2, eps_rel=0.1, h_init=0.1)
+    res = adaptive_forward(
+        drift_fn=lambda x, t: lam * x,
+        diffusion_fn=lambda x, t: jnp.full_like(x, sigma),
+        x0=jnp.zeros((1024, 2)),
+        t_begin=0.0,
+        t_end=4.0,  # ≫ relaxation time 1/|λ|
+        key=rng,
+        config=cfg,
+    )
+    assert int(res.iterations) < cfg.max_iters  # genuinely finished
+    # rejections genuinely happened, many times per sample on average
+    assert int(res.rejected.sum()) > 10 * res.x.shape[0]
+    want_std = sigma / (2.0 * abs(lam)) ** 0.5
+    assert float(res.x.mean()) == pytest.approx(0.0, abs=0.04)
+    assert float(res.x.std()) == pytest.approx(want_std, rel=0.06)
