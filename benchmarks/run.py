@@ -14,6 +14,7 @@ from . import (
     bench_compaction,
     bench_dimensionality,
     bench_kernels,
+    bench_precision,
     bench_serving,
     bench_sharded_sampling,
     table1_solver_grid,
@@ -32,6 +33,7 @@ SUITES = {
     "serving": bench_serving.main,
     "sharded_sampling": bench_sharded_sampling.main,  # 1-vs-N device scaling
     "compaction": bench_compaction.main,   # slot compaction vs monolithic
+    "precision": bench_precision.main,     # fp32/bf16/bf16_full policies
 }
 
 

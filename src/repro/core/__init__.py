@@ -6,6 +6,7 @@ extrapolated stochastic Improved Euler) lives in
 it needs (processes, tolerances, losses, sampling driver).
 """
 
+from repro.core.precision import PrecisionPolicy, resolve_policy
 from repro.core.sde import SDE, VESDE, VPSDE, SubVPSDE, get_sde
 from repro.core.solvers import (
     AdaptiveConfig,
@@ -22,6 +23,7 @@ from repro.core.solvers import (
     init_carry,
     predictor_corrector,
     probability_flow_rk45,
+    resolve_config,
     solve_chunk,
 )
 from repro.core.likelihood import bits_per_dim, log_likelihood
@@ -30,10 +32,12 @@ from repro.core.sampling import sample, sample_chunked, solve_in_chunks
 
 __all__ = [
     "SDE", "VESDE", "VPSDE", "SubVPSDE", "get_sde",
+    "PrecisionPolicy", "resolve_policy",
     "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult", "SolverCarry",
     "adaptive", "adaptive_forward", "available_solvers", "ddim",
     "euler_maruyama", "finalize", "get_solver", "init_carry",
-    "predictor_corrector", "probability_flow_rk45", "solve_chunk",
+    "predictor_corrector", "probability_flow_rk45", "resolve_config",
+    "solve_chunk",
     "dsm_loss", "make_loss_fn",
     "bits_per_dim", "log_likelihood",
     "sample", "sample_chunked", "solve_in_chunks",

@@ -13,7 +13,10 @@ uses these two factories instead of re-deriving the formula inline.
 
 from __future__ import annotations
 
+import math
+
 import jax
+import jax.numpy as jnp
 
 from repro.core.sde import SDE
 
@@ -30,6 +33,22 @@ def gaussian_score(sde: SDE, mu: float = 0.3, s0: float = 0.5):
         return -(x - m * mu) / (m * m * s0 * s0 + std * std)
 
     return score
+
+
+def gaussian_marginal_moments(
+    sde: SDE, mu: float = 0.3, s0: float = 0.5, t: float | None = None
+):
+    """Exact (mean, std) of x_t for x0 ~ N(mu, s0² I); t defaults to
+    ``sde.t_eps`` — the reference the conformance suite and the
+    precision benchmark both measure against."""
+    tt = sde.t_eps if t is None else t
+    m, s = sde.marginal(jnp.asarray(tt, jnp.float32))
+    return float(m) * mu, math.sqrt(float(m) ** 2 * s0**2 + float(s) ** 2)
+
+
+def gaussian_w2(mu1: float, s1: float, mu2: float, s2: float) -> float:
+    """Exact 2-Wasserstein distance between 1-D Gaussians."""
+    return math.sqrt((mu1 - mu2) ** 2 + (s1 - s2) ** 2)
 
 
 def gaussian_noise_pred(sde: SDE, mu: float = 0.3, s0: float = 0.5):

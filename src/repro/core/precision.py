@@ -1,0 +1,200 @@
+"""Precision policy: bf16 score evaluation with fp32 error control.
+
+The paper's entire cost model is score-network evaluations — Algorithm 1
+spends 2 NFE per step and everything else is cheap elementwise math — so
+running the network in bf16 recovers ~2× matmul throughput and ~2× HBM
+bandwidth on the ROADMAP's target hardware. The adaptive solver is
+uniquely suited to absorb the resulting low-precision score noise: its
+mixed tolerance is calibrated to δ ≥ ε_abs = (range)/256 ≈ 4e-3 (paper
+Sec. 3.1.3), orders of magnitude above bf16 rounding error at unit
+scale, and the step controller rejects any step whose error estimate
+trips — the same robustness argument Song et al. 2020a make for inexact
+scores. The *control path* (t, h, δ, the scaled-ℓ2 error, the accept
+decision, the step-size update) is therefore never downcast: integrator
+bookkeeping stays fp32 while only the expensive tensor math runs
+reduced (DESIGN.md §8).
+
+``PrecisionPolicy`` names one dtype per seam:
+
+  * ``compute_dtype`` — network activations (and the weight copies the
+    matmuls consume);
+  * ``param_dtype``   — stored ("master") weights;
+  * ``state_dtype``   — the solver carry's x / x_prev tensors;
+  * ``control_dtype`` — t / h / δ / error / accept arithmetic, pinned
+    to fp32 (constructor-enforced; there is no knob to lower it).
+
+Presets:
+
+  ========== ============= =========== ===========
+  preset     compute_dtype param_dtype state_dtype
+  ========== ============= =========== ===========
+  fp32       float32       float32     float32
+  bf16       bfloat16      float32     float32
+  bf16_full  bfloat16      bfloat16    bfloat16
+  ========== ============= =========== ===========
+
+The class is registered as a *static* pytree (no array leaves), so a
+policy rides through ``jax.jit`` closures, dataclass configs, and
+``functools.partial`` without tracing. All casts are ``astype``; under
+the ``fp32`` preset every cast is a same-dtype no-op, which is what
+makes the default bit-identical to the pre-policy code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: preset → (compute_dtype, param_dtype, state_dtype)
+PRESETS: Dict[str, tuple] = {
+    "fp32": ("float32", "float32", "float32"),
+    "bf16": ("bfloat16", "float32", "float32"),
+    "bf16_full": ("bfloat16", "bfloat16", "bfloat16"),
+}
+
+_CONTROL = "float32"
+
+
+def _canon(name) -> str:
+    return str(jnp.dtype(name).name)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True, init=False)
+class PrecisionPolicy:
+    """Which dtype lives at which seam of the sampling stack.
+
+    Construct from a preset name (``PrecisionPolicy("bf16")``) with
+    optional per-seam overrides (``PrecisionPolicy("bf16",
+    state_dtype="bfloat16")``). ``control_dtype`` cannot be overridden:
+    the tolerance/step-size/accept arithmetic is always fp32.
+    """
+
+    compute_dtype: str
+    param_dtype: str
+    state_dtype: str
+    control_dtype: str
+
+    def __init__(
+        self,
+        preset: str = "fp32",
+        *,
+        compute_dtype=None,
+        param_dtype=None,
+        state_dtype=None,
+    ):
+        if preset not in PRESETS:
+            raise ValueError(
+                f"unknown precision preset {preset!r}; have {sorted(PRESETS)}"
+            )
+        c, p, s = PRESETS[preset]
+        object.__setattr__(self, "compute_dtype", _canon(compute_dtype or c))
+        object.__setattr__(self, "param_dtype", _canon(param_dtype or p))
+        object.__setattr__(self, "state_dtype", _canon(state_dtype or s))
+        object.__setattr__(self, "control_dtype", _CONTROL)
+
+    # --- jnp dtypes per seam ------------------------------------------
+    @property
+    def compute(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def param(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def state(self):
+        return jnp.dtype(self.state_dtype)
+
+    @property
+    def control(self):
+        return jnp.dtype(self.control_dtype)
+
+    @property
+    def name(self) -> str:
+        """Preset name when the dtypes match one, else 'custom'."""
+        mine = (self.compute_dtype, self.param_dtype, self.state_dtype)
+        for preset, dts in PRESETS.items():
+            if mine == tuple(_canon(d) for d in dts):
+                return preset
+        return "custom"
+
+    @property
+    def is_fp32(self) -> bool:
+        return self.name == "fp32"
+
+    # --- casts ---------------------------------------------------------
+    def to_compute(self, x: Array) -> Array:
+        return x.astype(self.compute)
+
+    def to_state(self, x: Array) -> Array:
+        return x.astype(self.state)
+
+    def to_control(self, x: Array) -> Array:
+        return x.astype(self.control)
+
+    def _cast_tree(self, tree, dtype):
+        def leaf(a):
+            return a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a
+
+        return jax.tree_util.tree_map(leaf, tree)
+
+    def cast_params(self, params):
+        """Floating leaves → ``param_dtype`` (storage / master weights).
+
+        Integer leaves (token tables, counters) pass through untouched.
+        Works on concrete arrays and on ``ShapeDtypeStruct`` trees under
+        ``jax.eval_shape``.
+        """
+        return self._cast_tree(params, self.param)
+
+    def params_for_compute(self, params):
+        """Floating leaves → ``compute_dtype`` — the copy the matmuls
+        consume. XLA fuses the cast into the first use, so the master
+        copy is unchanged and no second resident copy persists."""
+        return self._cast_tree(params, self.compute)
+
+    # --- the score-fn seam ---------------------------------------------
+    def wrap_score_fn(
+        self, score_fn: Callable[[Array, Array], Array]
+    ) -> Callable[[Array, Array], Array]:
+        """Cast x → ``compute_dtype`` on entry, output → ``state_dtype``
+        on exit. t passes through untouched (control path, fp32). Under
+        the fp32 preset both casts are no-ops, so wrapping is free."""
+
+        def wrapped(x: Array, t: Array) -> Array:
+            return score_fn(self.to_compute(x), t).astype(self.state)
+
+        return wrapped
+
+    # --- reporting ------------------------------------------------------
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-friendly record for dry-run / benchmark artifacts."""
+        return {
+            "policy": self.name,
+            "compute_dtype": self.compute_dtype,
+            "param_dtype": self.param_dtype,
+            "state_dtype": self.state_dtype,
+            "control_dtype": self.control_dtype,
+            "compute_itemsize": int(self.compute.itemsize),
+            "param_itemsize": int(self.param.itemsize),
+            "state_itemsize": int(self.state.itemsize),
+        }
+
+
+def resolve_policy(policy: Optional[Any]) -> PrecisionPolicy:
+    """None | preset name | PrecisionPolicy → PrecisionPolicy."""
+    if policy is None:
+        return PrecisionPolicy("fp32")
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    if isinstance(policy, str):
+        return PrecisionPolicy(policy)
+    raise TypeError(
+        f"precision must be a preset name or PrecisionPolicy, got {policy!r}"
+    )

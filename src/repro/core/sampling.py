@@ -18,6 +18,7 @@ yield structure to retire converged slots mid-flight.
 
 from __future__ import annotations
 
+import functools
 import inspect
 from typing import Callable
 
@@ -27,10 +28,32 @@ import jax.numpy as jnp
 from repro.core.sde import SDE
 from repro.core.solvers import SolveResult, get_solver
 from repro.core.solvers.adaptive import (
-    AdaptiveConfig, _resolve_config, finalize, init_carry, solve_chunk,
+    AdaptiveConfig, finalize, init_carry, resolve_config, solve_chunk,
 )
 
 Array = jax.Array
+
+
+@functools.lru_cache(maxsize=None)
+def _accepts_sharding(solver: Callable) -> bool:
+    """Cached ``inspect.signature`` probe — solvers are module-level
+    functions, so the registry's handful of entries is cached forever
+    instead of re-inspected on every ``sample()`` call."""
+    return "sharding" in inspect.signature(solver).parameters
+
+
+@functools.lru_cache(maxsize=8)
+def _finalize_jit(sde, score_fn):
+    """Jitted ``finalize`` for an (sde, score_fn) pair. Repeated calls
+    with the same pair — the serving loop's pattern — reuse one trace
+    instead of retracing a fresh lambda per call; the small LRU bound
+    keeps one-shot closures (and the params they capture) from being
+    retained for the process lifetime the way a global jit with static
+    args would."""
+    return jax.jit(
+        functools.partial(finalize, sde, score_fn),
+        static_argnames=("denoise", "precision"),
+    )
 
 
 def sample(
@@ -64,7 +87,7 @@ def sample(
 
         arr_s, _, _ = sample_state_shardings(mesh, shape[0], len(shape))
         x_init = jax.lax.with_sharding_constraint(x_init, arr_s)
-        if "sharding" in inspect.signature(solver).parameters:
+        if _accepts_sharding(solver):
             solver_kwargs.setdefault("sharding", arr_s)
     return solver(sde, score_fn, x_init, k_solve, denoise=denoise, **solver_kwargs)
 
@@ -98,7 +121,7 @@ def solve_in_chunks(
     the serving loop does via ``make_sample_step``) — to amortize the
     compile across calls.
     """
-    cfg = _resolve_config(config, overrides)
+    cfg = resolve_config(config, overrides)
     k_prior, k_solve = jax.random.split(key)
     x_init = sde.prior_sample(k_prior, shape)
     sharding = None
@@ -114,15 +137,14 @@ def solve_in_chunks(
             max_sync_iters=max_sync_iters, config=cfg, sharding=sharding,
         )
     )
-    while bool(jnp.any(carry.t > sde.t_eps + 1e-12)) and (
-        int(carry.iterations) < cfg.max_iters
-    ):
+    # loop on the carry's own (already device-reduced) done mask — one
+    # scalar crosses to the host per chunk, never the full (B,) t vector
+    while not bool(carry.done.all()) and int(carry.iterations) < cfg.max_iters:
         carry = chunk(carry)
         if on_sync is not None:
             on_sync(carry)
-    return jax.jit(
-        lambda c: finalize(sde, score_fn, c, denoise=denoise)
-    )(carry)
+    return _finalize_jit(sde, score_fn)(carry, denoise=denoise,
+                                        precision=cfg.precision)
 
 
 def sample_chunked(

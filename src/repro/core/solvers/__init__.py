@@ -10,6 +10,7 @@ from .adaptive import (
     adaptive_forward,
     finalize,
     init_carry,
+    resolve_config,
     solve_chunk,
 )
 from .predictor_corrector import predictor_corrector
@@ -29,6 +30,7 @@ __all__ = [
     "adaptive_forward",
     "finalize",
     "init_carry",
+    "resolve_config",
     "solve_chunk",
     "predictor_corrector",
     "probability_flow_rk45",

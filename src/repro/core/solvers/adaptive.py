@@ -27,6 +27,15 @@ two numerically identical implementations:
   * pure jnp (default; what XLA fuses on its own), and
   * the fused Pallas kernel ``repro.kernels.solver_step`` (one HBM pass,
     in-VMEM error reduction) selected with ``use_fused_kernel=True``.
+
+Precision policy (DESIGN.md §8): ``AdaptiveConfig.precision`` selects a
+``repro.core.precision.PrecisionPolicy``. The carry's x / x_prev live in
+``state_dtype`` and the score network runs in ``compute_dtype``, while
+the *control path* — t, h, the mixed tolerance, the scaled-ℓ2 error,
+the accept decision, and the step-size update — always computes in
+fp32: the step controller is what absorbs low-precision score noise, so
+it is never itself downcast. The default ``"fp32"`` policy makes every
+cast a same-dtype no-op and is bit-identical to the unpoliced solver.
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import PrecisionPolicy, resolve_policy
 from repro.core.sde import SDE
 from repro.core.tolerance import (
     mixed_tolerance,
@@ -64,6 +74,9 @@ class AdaptiveConfig:
     extrapolate: bool = True  # accept x'' (paper) vs x' (ablation → EM-like)
     max_iters: int = 100_000
     use_fused_kernel: bool = False
+    #: precision preset name or PrecisionPolicy (DESIGN.md §8); "fp32"
+    #: (the default) is bit-identical to the policy-free solver
+    precision: "str | PrecisionPolicy" = "fp32"
 
 
 def _expand(v: Array, x: Array) -> Array:
@@ -77,7 +90,15 @@ def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
     e0 = h·a(t−h); d1 = h·g(t−h)²; d2 = √h·g(t−h); all shape (B,).
     x̃  = x − e0·x' + d1·score2 + d2·z   (drift evaluated at x', Alg. 1)
     x'' = ½ (x' + x̃)
+
+    Tensor operands arrive in the policy's state dtype; the math runs in
+    fp32 (error control is fp32 by design, and under the fp32 policy the
+    upcasts are no-ops). Returns (x'' fp32, err fp32); the caller casts
+    the accepted proposal back to the state dtype.
     """
+    x, x_prime, score2, z, x_prev = (
+        a.astype(jnp.float32) for a in (x, x_prime, score2, z, x_prev)
+    )
     x_tilde = x - _expand(e0, x) * x_prime + _expand(d1, x) * score2 + _expand(d2, x) * z
     x_high = 0.5 * (x_prime + x_tilde)
     delta = mixed_tolerance(
@@ -93,6 +114,10 @@ def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
 
 
 def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
+    """Fused Pallas path. Operands stay in the state dtype (bf16 under
+    ``bf16_full`` — that is the HBM-bandwidth win); the kernel upcasts
+    each VMEM tile to fp32, accumulates the scaled-ℓ2 residual in fp32,
+    and emits x'' in the operand dtype with e2 always fp32."""
     from repro.kernels.solver_step import ops as fused
 
     if cfg.error_norm != "l2":
@@ -131,8 +156,12 @@ class SolverCarry:
     """Resumable state of an Algorithm-1 solve (one pytree, jit-safe).
 
     Attributes:
-      x: current state, shape (B, ...).
-      x_prev: last accepted low-order proposal x' (mixed tolerance, Eq.5).
+      x: current state, shape (B, ...), in the policy's ``state_dtype``
+         (fp32 unless a bf16_full precision policy is active).
+      x_prev: last accepted low-order proposal x' (mixed tolerance, Eq.5);
+         same dtype as x. All control fields below (t, h, counters) are
+         fp32/int32 regardless of policy — the control path never
+         downcasts (DESIGN.md §8).
       t: per-sample current time, shape (B,). t <= t_eps means converged;
          t == 0.0 doubles as "idle slot" in the serving loop.
       h: per-sample current step size, shape (B,).
@@ -177,8 +206,14 @@ def init_carry(
     sharding=None,
     **overrides,
 ) -> SolverCarry:
-    """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot."""
-    cfg = _resolve_config(config, overrides)
+    """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot.
+
+    x is cast to the policy's ``state_dtype`` (no-op under fp32); t / h /
+    counters are always fp32 / int32 (control path).
+    """
+    cfg = resolve_config(config, overrides)
+    policy = resolve_policy(cfg.precision)
+    x_init = x_init.astype(policy.state)
     c_arr, c_vec = _constraints(sharding)
     batch = x_init.shape[0]
     t0 = c_vec(jnp.full((batch,), sde.T, jnp.float32))
@@ -201,11 +236,17 @@ def init_carry(
     )
 
 
-def _resolve_config(config, overrides) -> AdaptiveConfig:
+def resolve_config(config, overrides) -> AdaptiveConfig:
+    """Merge an optional AdaptiveConfig with kwarg overrides (public API:
+    ``sample()``/launchers use it to accept either form)."""
     cfg = config or AdaptiveConfig(**overrides)
     if overrides and config is not None:
         cfg = dataclasses.replace(config, **overrides)
     return cfg
+
+
+#: backward-compat alias (pre-PR-3 private name)
+_resolve_config = resolve_config
 
 
 def _constraints(sharding):
@@ -227,16 +268,21 @@ def _draw_noise(key: Array, x: Array):
     Shared key (2,): one batched draw — the monolithic-loop convention.
     Per-slot keys (B, 2): each sample's row comes from its own key, so
     the draw is invariant to which slot the sample occupies.
+
+    The draw is always generated in fp32 (full-precision noise stream,
+    identical bits under every precision policy) and cast to x's state
+    dtype — a no-op under fp32 policies.
     """
     if key.ndim == 1:
         key, sub = jax.random.split(key)
-        return key, jax.random.normal(sub, x.shape, x.dtype)
+        z = jax.random.normal(sub, x.shape, jnp.float32)
+        return key, z.astype(x.dtype)
     pairs = jax.vmap(jax.random.split)(key)  # (B, 2, 2)
     subs = pairs[:, 1]
     z = jax.vmap(
-        lambda k: jax.random.normal(k, x.shape[1:], x.dtype)
+        lambda k: jax.random.normal(k, x.shape[1:], jnp.float32)
     )(subs)
-    return pairs[:, 0], z
+    return pairs[:, 0], z.astype(x.dtype)
 
 
 def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
@@ -260,10 +306,15 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         z = c_arr(z)
 
         # --- low-order proposal: one reverse-EM step --------------------
+        # coefficients are fp32 control values, so the EM arithmetic
+        # promotes to fp32 even for bf16 state; the result is stored back
+        # at the state dtype (no-op under fp32 policies)
         score1 = score_fn(x, t_c)
         c0, c1, c2 = em_coeffs(t_c, h_c)
         x_prime = c_arr(
-            _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
+            (
+                _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
+            ).astype(x.dtype)
         )
 
         # --- high-order proposal: stochastic Improved Euler -------------
@@ -275,7 +326,9 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         x_high, err = step_math(
             x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs
         )
-        proposal = x_high if cfg.extrapolate else x_prime
+        # the jnp step math returns x'' in fp32 (the fused kernel already
+        # emits the operand dtype); the carry stores the state dtype
+        proposal = (x_high if cfg.extrapolate else x_prime).astype(x.dtype)
 
         accept = jnp.logical_and(err <= 1.0, active)
         acc_e = _expand(accept, x)
@@ -338,8 +391,15 @@ def solve_chunk(
     the same function and the PRNG threading does not depend on where
     chunk boundaries fall. This is the yield point the serving loop uses
     to retire and refill slots between horizons (DESIGN.md §7).
+
+    ``cfg.precision`` wraps ``score_fn`` at this seam: x casts to the
+    policy's compute dtype on entry and the score casts to the state
+    dtype on exit — policy-aware score functions (built with
+    ``make_score_fn(..., policy=...)``) see idempotent casts.
     """
-    cfg = _resolve_config(config, overrides)
+    cfg = resolve_config(config, overrides)
+    policy = resolve_policy(cfg.precision)
+    score_fn = policy.wrap_score_fn(score_fn)
     eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
     c_arr, c_vec = _constraints(sharding)
     body = _make_body(
@@ -363,12 +423,20 @@ def finalize(
     carry: SolverCarry,
     *,
     denoise: bool = True,
+    precision: "str | PrecisionPolicy" = "fp32",
 ) -> SolveResult:
-    """SolveResult from a finished carry (+ the paper's Tweedie denoise)."""
+    """SolveResult from a finished carry (+ the paper's Tweedie denoise).
+
+    Under a precision policy the final score evaluation runs in the
+    compute dtype like every other, but the Tweedie arithmetic itself is
+    fp32 — the denoised delivery is never quantized by the state dtype.
+    """
+    policy = resolve_policy(precision)
     x, nfe = carry.x, carry.nfe
     if denoise:
         t = jnp.full((carry.batch,), sde.t_eps)
-        x = sde.tweedie_denoise(x, score_fn(x, t))
+        score = score_fn(policy.to_compute(x), t).astype(jnp.float32)
+        x = sde.tweedie_denoise(x.astype(jnp.float32), score)
         nfe = nfe + 1
     return SolveResult(
         x=x,
@@ -406,13 +474,14 @@ def adaptive(
     to the unsharded run: the batch is embarrassingly parallel and the
     PRNG is sharding-invariant.
     """
-    cfg = _resolve_config(config, overrides)
+    cfg = resolve_config(config, overrides)
     carry = init_carry(sde, x_init, key, config=cfg, sharding=sharding)
     carry = solve_chunk(
         sde, score_fn, carry,
         max_sync_iters=cfg.max_iters, config=cfg, sharding=sharding,
     )
-    return finalize(sde, score_fn, carry, denoise=denoise)
+    return finalize(sde, score_fn, carry, denoise=denoise,
+                    precision=cfg.precision)
 
 
 # ---------------------------------------------------------------------------

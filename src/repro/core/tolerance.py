@@ -15,6 +15,13 @@ alternatives (δ(x') only, q=∞) are provided for the ablation benchmark.
 
 All reductions are per-sample: state is (B, ...) and norms reduce over
 every axis except the first, returning (B,).
+
+Precision (DESIGN.md §8): tolerance and error arithmetic is *control
+path* — every function here upcasts its tensor inputs to fp32 before
+doing math and returns fp32, regardless of the precision policy the
+state tensors run under. Under the default fp32 policy the upcasts are
+same-dtype no-ops, so the numerics are bit-identical to the unpoliced
+code.
 """
 
 from __future__ import annotations
@@ -31,10 +38,10 @@ def mixed_tolerance(
     eps_abs: float,
     eps_rel: float,
 ) -> Array:
-    """δ per element. Pass x_prev=None for the δ(x') ablation variant."""
-    mag = jnp.abs(x_low)
+    """δ per element (fp32). Pass x_prev=None for the δ(x') ablation variant."""
+    mag = jnp.abs(x_low.astype(jnp.float32))
     if x_prev is not None:
-        mag = jnp.maximum(mag, jnp.abs(x_prev))
+        mag = jnp.maximum(mag, jnp.abs(x_prev.astype(jnp.float32)))
     return jnp.maximum(eps_abs, eps_rel * mag)
 
 
@@ -43,14 +50,16 @@ def _reduce_axes(x: Array) -> tuple:
 
 
 def scaled_error_l2(x_low: Array, x_high: Array, delta: Array) -> Array:
-    """Per-sample E₂ = ||(x' - x'')/δ||₂ / sqrt(n); shape (B,)."""
-    r = (x_low - x_high) / delta
+    """Per-sample E₂ = ||(x' - x'')/δ||₂ / sqrt(n); fp32, shape (B,)."""
+    r = (x_low.astype(jnp.float32) - x_high.astype(jnp.float32)) / delta
     return jnp.sqrt(jnp.mean(r * r, axis=_reduce_axes(x_low)))
 
 
 def scaled_error_linf(x_low: Array, x_high: Array, delta: Array) -> Array:
-    """Per-sample E∞ (ablation variant); shape (B,)."""
-    r = jnp.abs((x_low - x_high) / delta)
+    """Per-sample E∞ (ablation variant); fp32, shape (B,)."""
+    r = jnp.abs(
+        (x_low.astype(jnp.float32) - x_high.astype(jnp.float32)) / delta
+    )
     return jnp.max(r, axis=_reduce_axes(x_low))
 
 
@@ -66,7 +75,8 @@ def next_step_size(
     """h ← clip(θ · h · E^{-r}, h_min, t_remaining)  (paper Sec. 3.1.4).
 
     ``err`` is clamped below to avoid h → inf when the error is ~0.
+    Control-path math: fp32 regardless of the state dtype.
     """
-    err = jnp.maximum(err, 1e-8)
+    err = jnp.maximum(err.astype(jnp.float32), 1e-8)
     h_new = safety * h * err ** (-r_exponent)
     return jnp.clip(h_new, h_min, jnp.maximum(t_remaining, h_min))

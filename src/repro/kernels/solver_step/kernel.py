@@ -16,6 +16,16 @@ the trailing axis sequentially, so accumulation is race-free).
 
 Per-sample coefficients (c's/d's, shape (B,)) ride in SMEM-friendly
 (bb, 1) blocks.
+
+Precision (DESIGN.md §8): tensor operands may be bf16 — that halves the
+HBM traffic of the (already bandwidth-bound) step. Each VMEM tile is
+upcast to fp32 in-register, the whole step arithmetic and the
+squared-residual accumulation run in fp32 (the (bb, 1) accumulator
+block is an fp32 output living in VMEM across the D-grid sweep), and
+only the x'' store rounds back to the operand dtype. The accept/reject
+decision therefore sees the same fp32 error the jnp reference computes
+from identical inputs. bf16 tiles use a 16-sublane minimum (vs 8 for
+fp32), so the default batch block doubles for bf16 operands.
 """
 
 from __future__ import annotations
@@ -33,11 +43,21 @@ DEFAULT_BLOCK_B = 8
 DEFAULT_BLOCK_D = 512
 
 
+def _block_b_for(dtype, block_b: int) -> int:
+    """Sublane-align the batch block: bf16 tiles want 16 sublanes."""
+    if jnp.dtype(dtype).itemsize < 4 and block_b == DEFAULT_BLOCK_B:
+        return 2 * DEFAULT_BLOCK_B
+    return block_b
+
+
 def _em_kernel(x_ref, s_ref, z_ref, c0_ref, c1_ref, c2_ref, out_ref):
-    c0 = c0_ref[:, :]  # (bb, 1) broadcasts over lanes
+    c0 = c0_ref[:, :]  # (bb, 1) fp32, broadcasts over lanes
     c1 = c1_ref[:, :]
     c2 = c2_ref[:, :]
-    out_ref[:, :] = c0 * x_ref[:, :] + c1 * s_ref[:, :] + c2 * z_ref[:, :]
+    x = x_ref[:, :].astype(jnp.float32)
+    s = s_ref[:, :].astype(jnp.float32)
+    z = z_ref[:, :].astype(jnp.float32)
+    out_ref[:, :] = (c0 * x + c1 * s + c2 * z).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_d", "interpret"))
@@ -53,9 +73,9 @@ def em_step(
     block_d: int = DEFAULT_BLOCK_D,
     interpret: bool = False,
 ) -> Array:
-    """x' = c0·x + c1·score + c2·z, one fused HBM pass."""
+    """x' = c0·x + c1·score + c2·z, one fused HBM pass (fp32 math)."""
     B, D = x.shape
-    bb, bd = min(block_b, B), min(block_d, D)
+    bb, bd = min(_block_b_for(x.dtype, block_b), B), min(block_d, D)
     grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
     coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
     state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
@@ -78,20 +98,23 @@ def _error_kernel(
 ):
     j = pl.program_id(1)
 
-    x = x_ref[:, :]
-    xp = xp_ref[:, :]
-    x_tilde = (
-        x - e0_ref[:, :] * xp + d1_ref[:, :] * s2_ref[:, :] + d2_ref[:, :] * z_ref[:, :]
-    )
+    # upcast the VMEM tile to fp32: the step arithmetic, tolerance, and
+    # residual accumulation are fp32 even for bf16 operands (no-op for
+    # fp32 operands); only the x'' store rounds back down
+    x = x_ref[:, :].astype(jnp.float32)
+    xp = xp_ref[:, :].astype(jnp.float32)
+    s2 = s2_ref[:, :].astype(jnp.float32)
+    z = z_ref[:, :].astype(jnp.float32)
+    x_tilde = x - e0_ref[:, :] * xp + d1_ref[:, :] * s2 + d2_ref[:, :] * z
     x_high = 0.5 * (xp + x_tilde)
-    xh_ref[:, :] = x_high
+    xh_ref[:, :] = x_high.astype(xh_ref.dtype)
 
     mag = jnp.abs(xp)
     if use_prev:
-        mag = jnp.maximum(mag, jnp.abs(xprev_ref[:, :]))
+        mag = jnp.maximum(mag, jnp.abs(xprev_ref[:, :].astype(jnp.float32)))
     delta = jnp.maximum(eps_abs, eps_rel * mag)
     r = (xp - x_high) / delta
-    partial = jnp.sum(r * r, axis=1, keepdims=True)  # (bb, 1)
+    partial = jnp.sum(r * r, axis=1, keepdims=True)  # (bb, 1) fp32
 
     @pl.when(j == 0)
     def _init():
@@ -121,9 +144,10 @@ def error_step(
     block_d: int = DEFAULT_BLOCK_D,
     interpret: bool = False,
 ):
-    """Fused x̃/x''/δ/residual-reduction. Returns (x'' (B,D), e2 (B,))."""
+    """Fused x̃/x''/δ/residual-reduction. Returns (x'' (B,D) in x's
+    dtype, e2 (B,) fp32 — the error/decision path never downcasts)."""
     B, D = x.shape
-    bb, bd = min(block_b, B), min(block_d, D)
+    bb, bd = min(_block_b_for(x.dtype, block_b), B), min(block_d, D)
     grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
     state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
     coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))

@@ -7,6 +7,11 @@ exercised everywhere). Padding is with zeros, which contribute exactly 0
 to the error sum (δ ≥ ε_abs > 0), and the e2 normalization uses the true
 unpadded D.
 
+Operands may be bf16 (precision policy, DESIGN.md §8): the kernel
+upcasts each tile to fp32 in-register, the error accumulator and the
+padded→true-D renormalization here are fp32 throughout, and x'' comes
+back in the operand dtype. Zero padding is exact in every dtype.
+
 ``sharded_error_step`` is the mesh-parallel form (DESIGN.md §3): a
 ``shard_map`` whose per-shard body runs the same Pallas kernel on its
 local batch (and optionally feature) block, keeping the error reduction

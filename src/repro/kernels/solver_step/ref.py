@@ -1,6 +1,6 @@
 """Pure-jnp oracle for the fused adaptive-solver step kernel.
 
-Shapes: state tensors are (B, D) fp32; per-sample coefficients are (B,).
+Shapes: state tensors are (B, D); per-sample coefficients are (B,) fp32.
 
 ``em_step``   : x' = c0·x + c1·score + c2·z
 ``error_step``: x̃  = x − e0·x' + d1·score2 + d2·z
@@ -8,6 +8,11 @@ Shapes: state tensors are (B, D) fp32; per-sample coefficients are (B,).
                 δ   = max(ε_abs, ε_rel · max(|x'|, |x'_prev|))   [or |x'| only]
                 e2  = sqrt(mean(((x' − x'')/δ)²))               per sample
 returns (x'', e2).
+
+Precision contract (mirrors the kernel, DESIGN.md §8): tensor operands
+may be bf16; all arithmetic — including δ and the residual reduction —
+runs in fp32, x'' is returned in the operand dtype, and e2 is always
+fp32. For fp32 operands every cast is a no-op.
 """
 
 from __future__ import annotations
@@ -19,7 +24,12 @@ Array = jax.Array
 
 
 def em_step(x: Array, score: Array, z: Array, c0: Array, c1: Array, c2: Array) -> Array:
-    return c0[:, None] * x + c1[:, None] * score + c2[:, None] * z
+    out = (
+        c0[:, None] * x.astype(jnp.float32)
+        + c1[:, None] * score.astype(jnp.float32)
+        + c2[:, None] * z.astype(jnp.float32)
+    )
+    return out.astype(x.dtype)
 
 
 def error_step(
@@ -36,6 +46,10 @@ def error_step(
     eps_rel: float,
     use_prev: bool = True,
 ):
+    out_dtype = x.dtype
+    x, x_prime, score2, z, x_prev = (
+        a.astype(jnp.float32) for a in (x, x_prime, score2, z, x_prev)
+    )
     x_tilde = x - e0[:, None] * x_prime + d1[:, None] * score2 + d2[:, None] * z
     x_high = 0.5 * (x_prime + x_tilde)
     mag = jnp.abs(x_prime)
@@ -44,4 +58,4 @@ def error_step(
     delta = jnp.maximum(eps_abs, eps_rel * mag)
     r = (x_prime - x_high) / delta
     e2 = jnp.sqrt(jnp.mean(r * r, axis=1))
-    return x_high, e2
+    return x_high.astype(out_dtype), e2

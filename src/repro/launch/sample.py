@@ -20,6 +20,10 @@ Three entry points:
 
   PYTHONPATH=src python -m repro.launch.sample --dryrun [--multi-pod]
   PYTHONPATH=src python -m repro.launch.sample --dryrun-loop [--loop-devices 64]
+
+All modes take ``--precision {fp32,bf16,bf16_full}`` (DESIGN.md §8):
+the score net / solver state run at the policy's dtypes (error control
+always fp32) and the dry-run JSONs record the per-device byte savings.
 """
 
 import os  # noqa: E402
@@ -53,6 +57,7 @@ import jax.numpy as jnp
 from repro.analysis.hlo import collective_bytes_from_text, summarize_cost
 from repro.configs.diffusion import CIFAR_DIT, HIGHRES_DIT
 from repro.core import VESDE, VPSDE, AdaptiveConfig, sample
+from repro.core.precision import PRESETS, resolve_policy
 from repro.core.solvers.adaptive import SolverCarry, solve_chunk
 from repro.models.dit import DiTConfig, dit_forward, init_dit, make_score_fn
 
@@ -109,16 +114,21 @@ def make_sample_step(net: DiTConfig, sde, cfg: AdaptiveConfig,
     and refilling slots at each sync horizon.
 
     ``forward_fn(params, x, t)`` is noise-prediction: score = -out/std.
+    ``cfg.precision`` threads through (DESIGN.md §8): the default DiT
+    forward runs in the policy's compute dtype, the 1/std rescale is
+    fp32, and ``solve_chunk`` keeps the carry at the state dtype. A
+    custom ``forward_fn`` is responsible for its own compute casting
+    (``solve_chunk`` still casts its x input / score output).
     """
+    policy = resolve_policy(cfg.precision)
     if forward_fn is None:
-        forward_fn = lambda p, x, t: dit_forward(p, x, t, net)
+        forward_fn = lambda p, x, t: dit_forward(p, x, t, net, policy=policy)
 
     def sample_step(params, carry, max_sync_iters: int = 1):
         def score_fn(x, t):
             _, std = sde.marginal(t)
-            return -forward_fn(params, x, t) / std.reshape(
-                (-1,) + (1,) * (x.ndim - 1)
-            )
+            out = forward_fn(params, x, t).astype(jnp.float32)
+            return -out / std.reshape((-1,) + (1,) * (x.ndim - 1))
 
         return solve_chunk(
             sde, score_fn, carry,
@@ -129,11 +139,14 @@ def make_sample_step(net: DiTConfig, sde, cfg: AdaptiveConfig,
 
 
 def make_pipelined_dit_forward(net: DiTConfig, *, num_microbatches: int = 4,
-                               axis: str = "pod"):
+                               axis: str = "pod", policy=None):
     """DiT forward with the layer stack pipelined over ``axis`` (GPipe).
 
     The per-sample time embedding rides along as an extra token so the
     (activations, conditioning) pair crosses stage boundaries together.
+    ``policy`` mirrors ``dit_forward``'s precision seams (DESIGN.md §8):
+    activations and the weight copies in compute dtype, fp32
+    timestep-embedding math from the stored weights.
     """
     import jax.numpy as jnp
 
@@ -166,9 +179,15 @@ def make_pipelined_dit_forward(net: DiTConfig, *, num_microbatches: int = 4,
         return jnp.concatenate([h, temb[:, None, :]], axis=1)
 
     def fwd(params, x, t):
+        # fp32 timestep-embedding math from the stored (master) weights
+        f32 = lambda w: w.astype(jnp.float32)
+        temb = timestep_embedding(t, 256)
+        temb = jax.nn.silu(temb @ f32(params["t_mlp1"])) @ f32(params["t_mlp2"])
+        if policy is not None:
+            x = x.astype(policy.compute)
+            params = policy.params_for_compute(params)
         h = _patchify(x, net) @ params["patch_in"] + params["pos_emb"]
-        temb = timestep_embedding(t, 256).astype(h.dtype)
-        temb = jax.nn.silu(temb @ params["t_mlp1"]) @ params["t_mlp2"]
+        temb = temb.astype(h.dtype)
         hm = jnp.concatenate([h, temb[:, None, :]], axis=1)
         hm = pipeline_forward(params["layers"], hm, body, axis=axis,
                               num_microbatches=num_microbatches)
@@ -181,23 +200,50 @@ def make_pipelined_dit_forward(net: DiTConfig, *, num_microbatches: int = 4,
     return fwd
 
 
-def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
+def _precision_record(policy, params_abs, state_x_abs, mesh) -> dict:
+    """Policy dtypes + the per-device byte footprint they imply, so the
+    bf16 memory/collective savings are visible in experiments/dryrun/
+    next to the fp32 artifacts. ``state_x_abs`` is the (B, ...) x spec;
+    the carry holds two such tensors (x and x_prev)."""
+    import numpy as np
+
+    from repro.parallel.sharding import data_axes
+
+    axes = data_axes(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    leaves = jax.tree_util.tree_leaves(params_abs)
+    param_bytes = int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves))
+    state_bytes = int(
+        2 * state_x_abs.size * jnp.dtype(state_x_abs.dtype).itemsize
+    )
+    rec = policy.as_dict()
+    rec["param_bytes_total"] = param_bytes
+    rec["state_bytes_per_device"] = state_bytes // n_data
+    return rec
+
+
+def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False,
+           precision: str = "fp32") -> dict:
     from repro.launch.mesh import make_production_mesh
 
     net = HIGHRES_DIT  # 256×256×3, ~100M-param DiT
     sde = VESDE(sigma_max=50.0)  # paper's high-res process
     mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = resolve_policy(precision)
 
     if pipeline:
         assert multi_pod, "pipeline stages live on the pod axis (2-pod mesh)"
     params_abs = jax.eval_shape(lambda k: init_dit(net, k),
                                 jax.random.PRNGKey(0))
+    # weights lowered at the policy's storage dtype (bf16 halves both the
+    # per-device weight HBM and the weight-collective bytes)
+    params_abs = jax.eval_shape(policy.cast_params, params_abs)
     p_shard = _dit_param_shardings(
         params_abs, mesh, pipeline_axis="pod" if pipeline else None)
     shp = (batch, net.image_size, net.image_size, net.channels)
     arr = lambda s, d=jnp.float32: jax.ShapeDtypeStruct(s, d)
     state_abs = SolverCarry(
-        x=arr(shp), x_prev=arr(shp),
+        x=arr(shp, policy.state), x_prev=arr(shp, policy.state),
         t=arr((batch,)), h=arr((batch,)),
         key=arr((batch, 2), jnp.uint32),  # per-slot keys: the serving form
         nfe=arr((batch,), jnp.int32),
@@ -211,8 +257,10 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
     s_shard = solver_carry_shardings(mesh, batch, len(shp),
                                      per_slot_keys=True)
 
-    fwd = (make_pipelined_dit_forward(net, axis="pod") if pipeline else None)
-    step = make_sample_step(net, sde, AdaptiveConfig(eps_rel=0.02),
+    fwd = (make_pipelined_dit_forward(net, axis="pod", policy=policy)
+           if pipeline else None)
+    step = make_sample_step(net, sde,
+                            AdaptiveConfig(eps_rel=0.02, precision=precision),
                             forward_fn=fwd)
     t0 = time.time()
     with mesh:
@@ -232,11 +280,14 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
         "memory": {"peak_bytes": getattr(mem, "peak_memory_in_bytes", None)},
         "cost": cost,
         "collectives": coll,
+        "precision": _precision_record(policy, params_abs, state_abs.x, mesh),
         "note": "one Algorithm-1 chunk iteration (2 score-net fwd + step math)",
     }
     os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = "" if policy.is_fp32 else f"_{policy.name}"
     with open(os.path.join(
-            OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"), "w") as f:
+            OUT_DIR,
+            f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"), "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)  # stable key order across regenerations
     gb = 1024 ** 3
     print(f"[{rec['arch']} × {rec['shape']} × {rec['mesh']}] OK  "
@@ -247,7 +298,7 @@ def dryrun(multi_pod: bool, batch: int = 512, pipeline: bool = False) -> dict:
     return rec
 
 
-def dryrun_loop(batch: int = 256) -> dict:
+def dryrun_loop(batch: int = 256, precision: str = "fp32") -> dict:
     """Lower + compile the whole sharded sampling loop on a fake data mesh.
 
     Unlike ``dryrun`` (one solver iteration), this compiles the complete
@@ -264,9 +315,11 @@ def dryrun_loop(batch: int = 256) -> dict:
     ndev = len(jax.devices())
     mesh = jax.make_mesh((ndev,), ("data",))
     assert batch % ndev == 0, f"batch {batch} must divide {ndev} devices"
+    policy = resolve_policy(precision)
 
     params_abs = jax.eval_shape(lambda k: init_dit(net, k),
                                 jax.random.PRNGKey(0))
+    params_abs = jax.eval_shape(policy.cast_params, params_abs)
     rep = NamedSharding(mesh, P())
     p_shard = jax.tree_util.tree_map(lambda _: rep, params_abs)
     shp = (batch, net.image_size, net.image_size, net.channels)
@@ -274,10 +327,11 @@ def dryrun_loop(batch: int = 256) -> dict:
     def run(params, key):
         def score_fn(x, t):
             _, std = sde.marginal(t)
-            return -dit_forward(params, x, t, net) / std.reshape(-1, 1, 1, 1)
+            out = dit_forward(params, x, t, net, policy=policy)
+            return -out.astype(jnp.float32) / std.reshape(-1, 1, 1, 1)
 
-        return sample(sde, score_fn, shp, key, method="adaptive",
-                      mesh=mesh, config=AdaptiveConfig(eps_rel=0.02))
+        return sample(sde, score_fn, shp, key, method="adaptive", mesh=mesh,
+                      config=AdaptiveConfig(eps_rel=0.02, precision=precision))
 
     key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
     t0 = time.time()
@@ -296,11 +350,16 @@ def dryrun_loop(batch: int = 256) -> dict:
         "memory": {"peak_bytes": getattr(mem, "peak_memory_in_bytes", None)},
         "cost": cost,
         "collectives": coll,
+        "precision": _precision_record(
+            policy, params_abs, jax.ShapeDtypeStruct(shp, policy.state), mesh,
+        ),
         "note": "full adaptive while_loop (prior + solver + denoise), batch sharded",
     }
     os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = "" if policy.is_fp32 else f"_{policy.name}"
     with open(os.path.join(
-            OUT_DIR, f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"), "w") as f:
+            OUT_DIR,
+            f"{rec['arch']}_{rec['shape']}_{rec['mesh']}{suffix}.json"), "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)  # stable key order across regenerations
     gb = 1024 ** 3
     print(f"[{rec['arch']} × {rec['shape']} × {rec['mesh']}] OK  "
@@ -311,17 +370,21 @@ def dryrun_loop(batch: int = 256) -> dict:
     return rec
 
 
-def demo() -> None:
+def demo(precision: str = "fp32") -> None:
     net = DiTConfig(image_size=16, patch=4, d_model=96, num_layers=2,
                     num_heads=4, d_ff=256)
     sde = VPSDE()
     key = jax.random.PRNGKey(0)
+    policy = resolve_policy(precision)
     params = init_dit(net, key)
-    score = make_score_fn(params, net, sde)
-    for method, kw in [("adaptive", dict(eps_rel=0.05)), ("em", dict(n_steps=100))]:
-        res = jax.jit(lambda k: sample(sde, score, (8, 16, 16, 3), k,
-                                       method=method, **kw))(key)
-        print(f"{method}: NFE {float(res.mean_nfe):.0f} "
+    score = make_score_fn(params, net, sde, policy=policy)
+    for method, kw in [
+        ("adaptive", dict(eps_rel=0.05, precision=precision)),
+        ("em", dict(n_steps=100)),
+    ]:
+        res = jax.jit(lambda k, kw=kw, method=method: sample(
+            sde, score, (8, 16, 16, 3), k, method=method, **kw))(key)
+        print(f"{method}[{policy.name}]: NFE {float(res.mean_nfe):.0f} "
               f"finite={bool(jnp.all(jnp.isfinite(res.x)))}")
 
 
@@ -336,13 +399,17 @@ def main() -> None:
     ap.add_argument("--pipeline", action="store_true",
                     help="GPipe the DiT layer stack over the pod axis")
     ap.add_argument("--batch", type=int, default=512)
+    ap.add_argument("--precision", choices=sorted(PRESETS), default="fp32",
+                    help="precision policy (DESIGN.md §8): network/state "
+                         "dtypes; error control always stays fp32")
     args = ap.parse_args()
     if args.dryrun:
-        dryrun(args.multi_pod, args.batch, pipeline=args.pipeline)
+        dryrun(args.multi_pod, args.batch, pipeline=args.pipeline,
+               precision=args.precision)
     elif args.dryrun_loop:
-        dryrun_loop(args.batch)
+        dryrun_loop(args.batch, precision=args.precision)
     else:
-        demo()
+        demo(precision=args.precision)
 
 
 if __name__ == "__main__":

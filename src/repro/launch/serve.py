@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core.precision import PRESETS
 from repro.launch.steps import make_serve_step
 from repro.models import init_decode_state, init_model
 from repro.models.config import ModelConfig
@@ -78,7 +79,8 @@ def serve_batch(
 
 
 def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
-                    sync_horizon: int = 4, compaction: bool = True) -> dict:
+                    sync_horizon: int = 4, compaction: bool = True,
+                    precision: str = "fp32") -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
@@ -90,6 +92,7 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     per-device refill counts that evidence shard-local compaction.
     """
     from repro.core import AdaptiveConfig, VPSDE
+    from repro.core.precision import resolve_policy
     from repro.launch.sample import make_sample_step
     from repro.models.dit import DiTConfig, init_dit
     from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
@@ -99,8 +102,11 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     net = DiTConfig(image_size=image_size, patch=4, d_model=32, num_layers=2,
                     num_heads=2, d_ff=64)
     sde = VPSDE()
-    cfg = AdaptiveConfig(eps_rel=0.05)
-    params = init_dit(net, jax.random.PRNGKey(0))
+    policy = resolve_policy(precision)
+    cfg = AdaptiveConfig(eps_rel=0.05, precision=precision)
+    # weights stored at the policy's param dtype; the per-device weight
+    # HBM and weight-broadcast bytes halve under bf16_full
+    params = policy.cast_params(init_dit(net, jax.random.PRNGKey(0)))
     step = make_sample_step(net, sde, cfg)
     b = DiffusionBatcher(sde, step, params,
                          (image_size, image_size, net.channels),
@@ -118,6 +124,7 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "slots_per_device": b.slots_per_device,
         "sync_horizon": sync_horizon,
         "compaction": compaction,
+        "precision": policy.as_dict(),
         "completed": len(done),
         "samples_per_sec": len(done) / dt,
         "mean_nfe": sum(nfes) / len(nfes),
@@ -125,7 +132,8 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "wasted_nfe_fraction": b.wasted_nfe_fraction,
         "refills_per_device": list(b.refills_per_device),
     }
-    print(f"diffusion serve: {rec['completed']}/{requests} requests in {dt:.1f}s "
+    print(f"diffusion serve[{policy.name}]: "
+          f"{rec['completed']}/{requests} requests in {dt:.1f}s "
           f"({rec['samples_per_sec']:.2f} samples/s) on {ndev} device(s), "
           f"{b.slots_per_device} slots/device, horizon {sync_horizon}, "
           f"mean NFE {rec['mean_nfe']:.0f}, "
@@ -151,12 +159,16 @@ def main() -> None:
                     help="device iterations per host sync (diffusion mode)")
     ap.add_argument("--no-compaction", action="store_true",
                     help="monolithic-wave baseline: no mid-flight slot refill")
+    ap.add_argument("--precision", default="fp32", choices=sorted(PRESETS),
+                    help="precision policy for the diffusion server "
+                         "(DESIGN.md §8); error control always stays fp32")
     args = ap.parse_args()
 
     if args.diffusion:
         serve_diffusion(slots=args.slots, requests=args.requests,
                         sync_horizon=args.sync_horizon,
-                        compaction=not args.no_compaction)
+                        compaction=not args.no_compaction,
+                        precision=args.precision)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

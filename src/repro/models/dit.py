@@ -6,6 +6,16 @@ backbone of a time-conditioned score network. Patchified image tokens
 run through the same attention/MLP blocks (non-causal), modulated per
 block by adaLN(t). ``score_apply`` exposes the s(x, t) signature every
 solver in ``repro.core`` consumes.
+
+Precision (DESIGN.md §8): pass ``policy=`` (a
+``repro.core.precision.PrecisionPolicy``) to run activations — and the
+weight copies the matmuls consume — in the policy's compute dtype. The
+timestep-embedding MLP always computes in fp32 from the stored (master)
+weights, and the norms upcast internally (``apply_norm``), so the
+conditioning path keeps full precision while the O(L·D²) block math
+runs reduced. ``make_score_fn(..., policy=...)`` additionally stores
+weights at ``param_dtype`` and returns the score in ``state_dtype``
+with the 1/std rescale done in fp32.
 """
 
 from __future__ import annotations
@@ -113,13 +123,28 @@ def _unpatchify(t: Array, cfg: DiTConfig) -> Array:
     )
 
 
-def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig) -> Array:
-    """x (B, H, W, C), t (B,) → same-shape output (raw network output)."""
-    mcfg = cfg.as_model_config()
-    h = _patchify(x, cfg) @ params["patch_in"] + params["pos_emb"]
+def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
+                policy=None) -> Array:
+    """x (B, H, W, C), t (B,) → same-shape output (raw network output).
 
-    temb = timestep_embedding(t, 256).astype(h.dtype)
-    temb = jax.nn.silu(temb @ params["t_mlp1"]) @ params["t_mlp2"]  # (B, D)
+    With ``policy`` the activations (and the weight copies the matmuls
+    consume) run in ``policy.compute``; the timestep-embedding math is
+    fp32 from the stored weights, and ``apply_norm`` upcasts internally,
+    so only the block matmuls/attention run reduced. The output is in
+    the compute dtype; ``make_score_fn`` handles the downstream cast.
+    """
+    mcfg = cfg.as_model_config()
+    # fp32 timestep-embedding math from the stored (master) weights,
+    # before any compute-dtype cast touches the tree
+    f32 = lambda w: w.astype(jnp.float32)
+    temb = timestep_embedding(t, 256)  # fp32
+    temb = jax.nn.silu(temb @ f32(params["t_mlp1"])) @ f32(params["t_mlp2"])
+
+    if policy is not None:
+        x = x.astype(policy.compute)
+        params = policy.params_for_compute(params)
+    h = _patchify(x, cfg) @ params["patch_in"] + params["pos_emb"]
+    temb = temb.astype(h.dtype)  # (B, D)
 
     def layer(h, lp):
         mod = jax.nn.silu(temb) @ lp["ada"] + lp["ada_b"]  # (B, 6D)
@@ -141,12 +166,23 @@ def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig) -> A
     return _unpatchify(h @ params["patch_out"], cfg)
 
 
-def make_score_fn(params, cfg: DiTConfig, sde):
-    """Wrap the raw net into s(x,t) = net(x,t)/std(t) (noise-pred param.)."""
+def make_score_fn(params, cfg: DiTConfig, sde, policy=None):
+    """Wrap the raw net into s(x,t) = net(x,t)/std(t) (noise-pred param.).
+
+    With ``policy``: weights are stored at ``param_dtype``, x casts to
+    ``compute_dtype`` on entry, the 1/std rescale runs in fp32 (std can
+    be O(1e-2) for VE — dividing in bf16 would waste the score's
+    mantissa), and the returned score is in ``state_dtype``.
+    """
+    if policy is not None:
+        params = policy.cast_params(params)
 
     def score(x: Array, t: Array) -> Array:
         _, std = sde.marginal(t)
-        out = dit_forward(params, x, t, cfg)
-        return -out / std.reshape((-1,) + (1,) * (x.ndim - 1))
+        if policy is not None:
+            x = policy.to_compute(x)
+        out = dit_forward(params, x, t, cfg, policy=policy)
+        s = -out.astype(jnp.float32) / std.reshape((-1,) + (1,) * (x.ndim - 1))
+        return s if policy is None else policy.to_state(s)
 
     return score

@@ -6,6 +6,11 @@ through every residual block, down/up path with skip connections, GroupNorm
 + SiLU) at a scale trainable on CPU for the end-to-end examples. The
 output is the noise prediction; ``make_score_fn`` rescales by −1/std(t),
 matching the training loss in ``repro.core.losses``.
+
+Precision (DESIGN.md §8): both forwards accept ``policy=`` to run
+activations in the policy's compute dtype. The timestep-embedding MLP
+computes in fp32 from the stored weights and GroupNorm upcasts
+internally (``_groupnorm``), mirroring the DiT seams.
 """
 
 from __future__ import annotations
@@ -47,9 +52,13 @@ def init_mlp_score(cfg: MLPScoreConfig, key: Array) -> Dict[str, Any]:
     return {"layers": layers}
 
 
-def mlp_score_forward(params, x: Array, t: Array, cfg: MLPScoreConfig) -> Array:
-    temb = timestep_embedding(t, cfg.t_dim)
-    h = jnp.concatenate([x, temb], axis=-1)
+def mlp_score_forward(params, x: Array, t: Array, cfg: MLPScoreConfig,
+                      policy=None) -> Array:
+    temb = timestep_embedding(t, cfg.t_dim)  # fp32 embedding math
+    if policy is not None:
+        x = x.astype(policy.compute)
+        params = policy.params_for_compute(params)
+    h = jnp.concatenate([x, temb.astype(x.dtype)], axis=-1)
     for i, lp in enumerate(params["layers"]):
         h = h @ lp["w"] + lp["b"]
         if i < len(params["layers"]) - 1:
@@ -151,9 +160,17 @@ def init_unet(cfg: UNetConfig, key: Array) -> Dict[str, Any]:
     return p
 
 
-def unet_forward(params, x: Array, t: Array, cfg: UNetConfig) -> Array:
+def unet_forward(params, x: Array, t: Array, cfg: UNetConfig,
+                 policy=None) -> Array:
+    # fp32 timestep-embedding math from the stored (master) weights
+    f32 = lambda w: w.astype(jnp.float32)
     temb = timestep_embedding(t, cfg.t_dim)
-    temb = jax.nn.silu(temb @ params["t_w1"]) @ params["t_w2"]
+    temb = jax.nn.silu(temb @ f32(params["t_w1"])) @ f32(params["t_w2"])
+
+    if policy is not None:
+        x = x.astype(policy.compute)
+        params = policy.params_for_compute(params)
+        temb = temb.astype(policy.compute)
 
     h = _conv(x, params["conv_in"])
     skips = []
@@ -173,13 +190,27 @@ def unet_forward(params, x: Array, t: Array, cfg: UNetConfig) -> Array:
     return _conv(h, params["conv_out"])
 
 
-def make_score_fn(forward_fn, params, cfg, sde):
-    """Noise-prediction net → score: s(x,t) = −net(x,t)/std(t)."""
+def make_score_fn(forward_fn, params, cfg, sde, policy=None):
+    """Noise-prediction net → score: s(x,t) = −net(x,t)/std(t).
+
+    With ``policy``: weights stored at ``param_dtype``, x cast to the
+    compute dtype on entry (``forward_fn`` must accept ``policy=`` —
+    both forwards in this module do), fp32 1/std rescale, score returned
+    in ``state_dtype``.
+    """
+    if policy is not None:
+        params = policy.cast_params(params)
 
     def score(x: Array, t: Array) -> Array:
         _, std = sde.marginal(t)
-        return -forward_fn(params, x, t, cfg) / std.reshape(
+        if policy is None:
+            out = forward_fn(params, x, t, cfg)
+        else:
+            out = forward_fn(params, policy.to_compute(x), t, cfg,
+                             policy=policy)
+        s = -out.astype(jnp.float32) / std.reshape(
             (-1,) + (1,) * (x.ndim - 1)
         )
+        return s if policy is None else policy.to_state(s)
 
     return score

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AdaptiveConfig
+from repro.core.precision import resolve_policy
 from repro.core.sde import SDE
 from repro.core.solvers.adaptive import SolverCarry
 
@@ -80,6 +81,13 @@ class DiffusionBatcher:
     occupied slot has converged — exactly the "wait for all images"
     semantics of the paper's batched loop, kept for A/B measurement
     (benchmarks/bench_compaction.py).
+
+    ``policy`` (DESIGN.md §8) sets the slot carry's state dtype; it
+    defaults to ``cfg.precision`` so the carry matches what the
+    ``sample_step`` built from the same cfg expects. Retirement,
+    compaction, and admission are dtype-agnostic — admitted priors are
+    cast to the carry's dtype, and the host only ever reads the fp32
+    control fields plus the retired rows.
     """
 
     def __init__(
@@ -94,9 +102,13 @@ class DiffusionBatcher:
         mesh=None,
         sync_horizon: int = 1,
         compaction: bool = True,
+        policy=None,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
+        self.policy = resolve_policy(
+            policy if policy is not None else self.cfg.precision
+        )
         self.params = params
         self.n = slots
         self.shape = tuple(sample_shape)
@@ -146,8 +158,8 @@ class DiffusionBatcher:
         B = slots
         zi = jnp.zeros((B,), jnp.int32)
         self._carry = SolverCarry(
-            x=jnp.zeros((B,) + self.shape, jnp.float32),
-            x_prev=jnp.zeros((B,) + self.shape, jnp.float32),
+            x=jnp.zeros((B,) + self.shape, self.policy.state),
+            x_prev=jnp.zeros((B,) + self.shape, self.policy.state),
             t=jnp.zeros((B,), jnp.float32),    # 0 = idle/converged
             h=jnp.full((B,), self.cfg.h_init, jnp.float32),
             key=jnp.zeros((B, 2), jnp.uint32),  # per-slot noise streams
@@ -222,7 +234,10 @@ class DiffusionBatcher:
         #    caller's (cf. sample()/finalize(denoise=True))
         conv_idx = [i for i in range(self.n) if conv[i]]
         if conv_idx:
-            rows = np.asarray(c.x[jnp.asarray(conv_idx)])
+            # delivery is always fp32 regardless of the state dtype
+            rows = np.asarray(
+                c.x[jnp.asarray(conv_idx)].astype(jnp.float32)
+            )
             nfe = np.asarray(c.nfe)
             for row, i in zip(rows, conv_idx):
                 req = self._slot_req[i]

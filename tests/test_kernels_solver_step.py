@@ -1,4 +1,12 @@
-"""Shape/dtype sweep: solver_step Pallas kernel (interpret) vs jnp oracle."""
+"""Shape/dtype sweep: solver_step Pallas kernel (interpret) vs jnp oracle.
+
+bf16 operands exercise the precision-policy contract (DESIGN.md §8):
+the kernel upcasts each tile to fp32, keeps the error accumulation in
+fp32 (e2 is fp32 for every operand dtype), and rounds only the x''
+store back to bf16 — so kernel and oracle agree to fp32-accumulation
+tolerance, not bf16 tolerance. The shape list includes D values not
+divisible by the 128-lane width, so bf16 zero-padding is exercised too.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +16,18 @@ import pytest
 from repro.kernels.solver_step import ops, ref
 
 SHAPES = [(1, 128), (4, 300), (8, 3072), (3, 17), (16, 1024), (2, 65536)]
-DTYPES = [jnp.float32]
+DTYPES = [jnp.float32, jnp.bfloat16]
+# the fp32 step math is identical on both sides, so even bf16 outputs
+# only differ by the final rounding — and e2 (fp32 everywhere) only by
+# the kernel's tiled accumulation order
+TOLS = {
+    jnp.dtype(jnp.float32): dict(rtol=1e-6, atol=1e-6),
+    jnp.dtype(jnp.bfloat16): dict(rtol=1e-2, atol=1e-2),
+}
+
+
+def _f32(a):
+    return np.asarray(a, np.float32)
 
 
 @pytest.mark.parametrize("shape", SHAPES, ids=str)
@@ -18,25 +37,30 @@ def test_em_step_matches_ref(shape, dtype, rng):
     ks = jax.random.split(rng, 6)
     x, s, z = (jax.random.normal(k, shape, dtype) for k in ks[:3])
     c0, c1, c2 = (jax.random.uniform(k, (B,), jnp.float32) for k in ks[3:])
+    out = ops.em_step(x, s, z, c0, c1, c2)
+    assert out.dtype == jnp.dtype(dtype)
     np.testing.assert_allclose(
-        np.asarray(ops.em_step(x, s, z, c0, c1, c2)),
-        np.asarray(ref.em_step(x, s, z, c0, c1, c2)),
-        rtol=1e-6, atol=1e-6,
+        _f32(out), _f32(ref.em_step(x, s, z, c0, c1, c2)),
+        **TOLS[jnp.dtype(dtype)],
     )
 
 
 @pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
 @pytest.mark.parametrize("use_prev", [True, False], ids=["prev", "noprev"])
-def test_error_step_matches_ref(shape, use_prev, rng):
+def test_error_step_matches_ref(shape, dtype, use_prev, rng):
     B, D = shape
     ks = jax.random.split(rng, 8)
-    x, xp, s2, z, xv = (jax.random.normal(k, shape) for k in ks[:5])
+    x, xp, s2, z, xv = (jax.random.normal(k, shape, dtype) for k in ks[:5])
     e0, d1, d2 = (jax.random.uniform(k, (B,)) for k in ks[5:])
     kw = dict(eps_abs=0.0078, eps_rel=0.05, use_prev=use_prev)
     xh_k, e2_k = ops.error_step(x, xp, s2, z, xv, e0, d1, d2, **kw)
     xh_r, e2_r = ref.error_step(x, xp, s2, z, xv, e0, d1, d2, **kw)
-    np.testing.assert_allclose(np.asarray(xh_k), np.asarray(xh_r),
-                               rtol=1e-6, atol=1e-6)
+    assert xh_k.dtype == jnp.dtype(dtype)
+    # the error/decision output is fp32 regardless of operand dtype
+    assert e2_k.dtype == jnp.float32 and e2_r.dtype == jnp.float32
+    np.testing.assert_allclose(_f32(xh_k), _f32(xh_r),
+                               **TOLS[jnp.dtype(dtype)])
     np.testing.assert_allclose(np.asarray(e2_k), np.asarray(e2_r),
                                rtol=1e-5, atol=1e-6)
 
@@ -133,3 +157,55 @@ def test_fused_solver_parity_under_rejection(eps_rel, rng):
     np.testing.assert_array_equal(np.asarray(r_jnp.nfe), np.asarray(r_fused.nfe))
     np.testing.assert_allclose(np.asarray(r_jnp.x), np.asarray(r_fused.x),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("preset", ["bf16", "bf16_full"])
+def test_fused_solver_bf16_decision_parity(preset, rng):
+    """Acceptance gate (DESIGN.md §8): from an *identical* carry, one
+    fused iteration must take the exact accept/reject decision the jnp
+    reference takes — both compute the scaled-ℓ2 error in fp32 from the
+    same state-dtype inputs, so the per-sample nfe/accepted/rejected
+    deltas are bit-identical and the states agree to the state dtype's
+    resolution.
+
+    The comparison is per-step from a shared carry (the jnp trajectory),
+    sampled along the entire solve. A whole-trajectory counter
+    comparison would not be sound under bf16: the kernel's tiled
+    reduction perturbs h in its last bits, the bf16-quantized score
+    amplifies that into O(1e-3) state divergence, and from then on the
+    two paths decide over *different* states."""
+    from repro.core import AdaptiveConfig, VPSDE, init_carry, solve_chunk
+    from repro.core.analytic import gaussian_score
+
+    sde = VPSDE()
+    score = gaussian_score(sde, 0.3, 0.5)
+    k_prior, k_solve = jax.random.split(rng)
+    x0 = sde.prior_sample(k_prior, (16, 24))
+    atol = 5e-3 if preset == "bf16" else 2e-2  # state fp32 vs bf16
+    step1 = {}
+    for fused in (False, True):
+        cfg = AdaptiveConfig(eps_rel=0.02, precision=preset,
+                             use_fused_kernel=fused)
+        step1[fused] = jax.jit(
+            lambda c, cfg=cfg: solve_chunk(sde, score, c, max_sync_iters=1,
+                                           config=cfg)
+        )
+    cfg = AdaptiveConfig(eps_rel=0.02, precision=preset)
+    carry = init_carry(sde, x0, k_solve, config=cfg)
+    compared = 0
+    while bool(jnp.any(~carry.done)):
+        a = step1[False](carry)  # jnp reference step
+        b = step1[True](carry)   # fused step from the SAME carry
+        for name in ("nfe", "accepted", "rejected", "done"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, name)), np.asarray(getattr(b, name)),
+                err_msg=name,
+            )
+        np.testing.assert_allclose(_f32(a.x), _f32(b.x), rtol=atol, atol=atol)
+        np.testing.assert_allclose(np.asarray(a.h), np.asarray(b.h),
+                                   rtol=1e-5, atol=1e-6)
+        carry = a  # continue along the jnp trajectory
+        compared += 1
+    # both branches of the decision were genuinely exercised
+    assert int(carry.rejected.sum()) > 0 and int(carry.accepted.sum()) > 0
+    assert compared > 20

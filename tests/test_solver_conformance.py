@@ -25,10 +25,13 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import VESDE, VPSDE, available_solvers, sample
-from repro.core.analytic import gaussian_score
+from repro.core.analytic import (
+    gaussian_marginal_moments, gaussian_score, gaussian_w2,
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_DIR = os.path.join(ROOT, "experiments", "conformance")
@@ -50,12 +53,13 @@ def _write_summary():
     lines = [
         "### Solver conformance (analytic OU marginal at t = t_eps)",
         "",
-        "| solver | sde | mean err | std err | W2 | mean NFE | tol |",
-        "|---|---|---|---|---|---|---|",
+        "| solver | sde | precision | mean err | std err | W2 | mean NFE | tol |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for r in _ROWS:
         lines.append(
-            f"| {r['solver']} | {r['sde']} | {r['mean_err']:.4f} "
+            f"| {r['solver']} | {r['sde']} | {r.get('precision', 'fp32')} "
+            f"| {r['mean_err']:.4f} "
             f"| {r['std_err']:.4f} | {r['w2']:.4f} "
             f"| {r['mean_nfe']:.0f} | {r['tol']:.2f} |"
         )
@@ -69,13 +73,7 @@ def analytic_score(sde):
 
 def analytic_marginal(sde):
     """Exact (mean, std) of x_{t_eps} for Gaussian data N(MU, S0²)."""
-    m, s = sde.marginal(jnp.asarray(sde.t_eps, jnp.float32))
-    return float(m) * MU, math.sqrt(float(m) ** 2 * S0**2 + float(s) ** 2)
-
-
-def gaussian_w2(mu1, s1, mu2, s2):
-    """Exact 2-Wasserstein distance between 1-D Gaussians."""
-    return math.sqrt((mu1 - mu2) ** 2 + (s1 - s2) ** 2)
+    return gaussian_marginal_moments(sde, MU, S0)
 
 
 def _solve(sde, method, kw, seed=0):
@@ -84,6 +82,24 @@ def _solve(sde, method, kw, seed=0):
                          method=method, denoise=False, **kw)
     )(jax.random.PRNGKey(seed))
     return res
+
+
+def _moments(x):
+    """Sample (mean, std) in fp64 host math from an fp32 upcast — a bf16
+    state dtype must not leak bf16 reduction error into the gate."""
+    xf = np.asarray(x, np.float32)
+    return float(xf.mean()), float(xf.std())
+
+
+# fp32 adaptive baselines, shared between the per-preset gate runs
+# (same kw + seed ⇒ same result; no reason to re-solve per preset)
+_FP32_ADAPTIVE = {}
+
+
+def _fp32_adaptive(sde_name, sde, kw):
+    if sde_name not in _FP32_ADAPTIVE:
+        _FP32_ADAPTIVE[sde_name] = _solve(sde, "adaptive", kw)
+    return _FP32_ADAPTIVE[sde_name]
 
 
 # (solver, kwargs, W2 tolerance). PC's ancestral predictor + finite-step
@@ -117,12 +133,45 @@ def test_solver_matches_analytic_marginal(solver, sde_name, sde):
     s = float(res.x.std())
     w2 = gaussian_w2(mu, s, mu_a, s_a)
     _ROWS.append({
-        "solver": solver, "sde": sde_name,
+        "solver": solver, "sde": sde_name, "precision": "fp32",
         "mean_err": abs(mu - mu_a), "std_err": abs(s - s_a), "w2": w2,
         "mean_nfe": float(res.mean_nfe), "tol": tol,
     })
     assert not bool(jnp.any(jnp.isnan(res.x)))
     assert w2 < tol, (solver, sde_name, mu, s, (mu_a, s_a))
+
+
+@pytest.mark.parametrize("sde_name,sde", [("vp", VPSDE()),
+                                          ("ve", VESDE(sigma_max=10.0))])
+@pytest.mark.parametrize("preset", ["bf16", "bf16_full"])
+def test_adaptive_precision_conformance(preset, sde_name, sde):
+    """The precision-policy gate (DESIGN.md §8): under a bf16 policy the
+    adaptive solver must stay inside a widened-but-bounded envelope of
+    the fp32 run on the same tolerance — marginal-moment error ≤ 2× the
+    fp32 W2 (plus the Monte-Carlo floor of the finite batch) and mean
+    NFE ≤ 1.25× fp32. The step controller absorbing bf16 score noise
+    without NFE blow-up is the whole premise of running the network
+    reduced."""
+    kw, _ = CASES["adaptive"]
+    res32 = _fp32_adaptive(sde_name, sde, kw)
+    resbf = _solve(sde, "adaptive", dict(kw, precision=preset))
+    mu_a, s_a = analytic_marginal(sde)
+    mu_32, s_32 = _moments(res32.x)
+    mu_bf, s_bf = _moments(resbf.x)
+    w2_32 = gaussian_w2(mu_32, s_32, mu_a, s_a)
+    w2_bf = gaussian_w2(mu_bf, s_bf, mu_a, s_a)
+    mc_floor = 3.0 * s_a / math.sqrt(BATCH * DIM)
+    _ROWS.append({
+        "solver": "adaptive", "sde": sde_name, "precision": preset,
+        "mean_err": abs(mu_bf - mu_a),
+        "std_err": abs(s_bf - s_a), "w2": w2_bf,
+        "mean_nfe": float(resbf.mean_nfe), "tol": 2.0 * w2_32 + mc_floor,
+    })
+    assert not bool(jnp.any(jnp.isnan(resbf.x)))
+    assert w2_bf <= 2.0 * w2_32 + mc_floor, (preset, w2_bf, w2_32)
+    assert float(resbf.mean_nfe) <= 1.25 * float(res32.mean_nfe), (
+        preset, float(resbf.mean_nfe), float(res32.mean_nfe),
+    )
 
 
 def test_adaptive_nfe_below_em_at_equal_error():
@@ -139,7 +188,7 @@ def test_adaptive_nfe_below_em_at_equal_error():
     assert w2_ad <= w2_em + 2 * mc_floor + 0.02, (w2_ad, w2_em)
     assert float(res_ad.mean_nfe) < 0.5 * float(res_em.mean_nfe)
     _ROWS.append({
-        "solver": "adaptive-vs-em1000", "sde": "vp",
+        "solver": "adaptive-vs-em1000", "sde": "vp", "precision": "fp32",
         "mean_err": abs(float(res_ad.x.mean()) - mu_a),
         "std_err": abs(float(res_ad.x.std()) - s_a),
         "w2": w2_ad,
