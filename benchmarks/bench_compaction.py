@@ -100,7 +100,9 @@ def _run(sde, cfg, step, slots: int, occupancy: float, compaction: bool):
     }
 
 
-def main(argv=None) -> None:
+def main(argv=()) -> None:
+    # default () so benchmarks.run's own flags (--only ...) never leak
+    # into this parser; direct invocation passes sys.argv[1:] below
     ap = argparse.ArgumentParser()
     ap.add_argument("--slots", type=int, default=16)
     args = ap.parse_args(argv)
@@ -125,4 +127,6 @@ def main(argv=None) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

@@ -13,6 +13,7 @@ import time
 from . import (
     bench_compaction,
     bench_dimensionality,
+    bench_guidance,
     bench_kernels,
     bench_precision,
     bench_serving,
@@ -34,6 +35,7 @@ SUITES = {
     "sharded_sampling": bench_sharded_sampling.main,  # 1-vs-N device scaling
     "compaction": bench_compaction.main,   # slot compaction vs monolithic
     "precision": bench_precision.main,     # fp32/bf16/bf16_full policies
+    "guidance": bench_guidance.main,       # conditioning NFE overhead
 }
 
 

@@ -1,0 +1,80 @@
+"""Checkerboard-mask inpainting with the adaptive solver — no
+checkpoint needed (DESIGN.md §9), mirroring examples/sample_adaptive.py.
+
+An exactly solvable per-pixel Gaussian process stands in for a trained
+score net, so every claim is checkable: observed pixels are projected
+(re-noised to each sample's own t) after every accepted step and pinned
+exactly at delivery, the free region still lands on the true
+distribution, and the NFE overhead vs the unconditional solve stays
+small. The same flags run on the DiT demo (`python -m
+repro.launch.sample --inpaint`) and per-request in the server
+(`python -m repro.launch.serve --diffusion --inpaint`).
+
+  PYTHONPATH=src python examples/inpaint_adaptive.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdaptiveConfig, VESDE, inpaint, sample
+
+H = W = 16  # 16×16×3 images
+C = 3
+BATCH = 64
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    sde = VESDE(sigma_max=30.0)
+
+    # per-pixel Gaussian data: mu (H,W,C), per-pixel std s — exact score
+    mu = 0.5 + 0.1 * jax.random.normal(key, (H, W, C))
+    s = 0.05 + 0.2 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                        (H, W, C))
+
+    def score(x, t):
+        m, std = sde.marginal(t)
+        m = m.reshape(-1, 1, 1, 1)
+        std = std.reshape(-1, 1, 1, 1)
+        return -(x - m * mu) / ((m * s) ** 2 + std**2)
+
+    # a "photo" to damage: one draw from the data distribution
+    truth = mu + s * jax.random.normal(jax.random.fold_in(key, 2),
+                                       (BATCH, H, W, C))
+    yy, xx = jnp.mgrid[:H, :W]
+    checker = (((yy // 4 + xx // 4) % 2) == 0)[None, :, :, None]
+    mask = jnp.broadcast_to(checker, truth.shape).astype(jnp.float32)
+
+    shape = (BATCH, H, W, C)
+    res_u = jax.jit(lambda k: sample(
+        sde, score, shape, k, method="adaptive", eps_rel=0.02))(key)
+
+    conditioner, cond = inpaint(mask, truth)
+    res = jax.jit(lambda k: sample(
+        sde, score, shape, k, method="adaptive",
+        config=AdaptiveConfig(eps_rel=0.02, conditioner=conditioner),
+        cond=cond))(key)
+
+    obs_resid = float(jnp.abs((res.x - truth) * mask).max())
+    free = res.x * (1 - mask)
+    n_free = float((1 - mask).sum())
+    free_mean_err = float(jnp.abs(
+        (free.sum(0) / BATCH - mu * (1 - mask[0])).sum() / n_free * BATCH))
+    ratio = float(res.mean_nfe) / float(res_u.mean_nfe)
+
+    print(f"{'':24s}{'NFE':>8s}{'iters':>8s}")
+    print(f"{'unconditional':24s}{float(res_u.mean_nfe):8.0f}"
+          f"{int(res_u.iterations):8d}")
+    print(f"{'checkerboard inpaint':24s}{float(res.mean_nfe):8.0f}"
+          f"{int(res.iterations):8d}")
+    print(f"\nobserved-pixel residual (exact pin at delivery): "
+          f"{obs_resid:.2e}")
+    print(f"free-region mean error vs true per-pixel mean:   "
+          f"{free_mean_err:.4f}")
+    print(f"NFE ratio inpaint/unconditional: {ratio:.2f}x "
+          f"(conformance gate: <= 1.10x at the OU gate shape; "
+          f"projection costs no score evaluations)")
+
+
+if __name__ == "__main__":
+    main()

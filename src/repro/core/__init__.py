@@ -6,6 +6,16 @@ extrapolated stochastic Improved Euler) lives in
 it needs (processes, tolerances, losses, sampling driver).
 """
 
+from repro.core.guidance import (
+    ClassifierFree,
+    Colorize,
+    Conditioner,
+    Inpaint,
+    class_conditional,
+    classifier_free,
+    colorize,
+    inpaint,
+)
 from repro.core.precision import PrecisionPolicy, resolve_policy
 from repro.core.sde import SDE, VESDE, VPSDE, SubVPSDE, get_sde
 from repro.core.solvers import (
@@ -33,6 +43,8 @@ from repro.core.sampling import sample, sample_chunked, solve_in_chunks
 __all__ = [
     "SDE", "VESDE", "VPSDE", "SubVPSDE", "get_sde",
     "PrecisionPolicy", "resolve_policy",
+    "Conditioner", "ClassifierFree", "Inpaint", "Colorize",
+    "class_conditional", "classifier_free", "inpaint", "colorize",
     "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult", "SolverCarry",
     "adaptive", "adaptive_forward", "available_solvers", "ddim",
     "euler_maruyama", "finalize", "get_solver", "init_carry",

@@ -51,6 +51,31 @@ def gaussian_w2(mu1: float, s1: float, mu2: float, s2: float) -> float:
     return math.sqrt((mu1 - mu2) ** 2 + (s1 - s2) ** 2)
 
 
+def class_gaussian_score(sde: SDE, mus, s0: float = 0.5,
+                         null_mu: float = 0.3):
+    """Label-aware exact score (DESIGN.md §9 test workhorse): class ``y``
+    has data x0 ~ N(mus[y], s0² I); a negative (null) label — and
+    ``y=None`` — selects ``null_mu``, computing *exactly* the same
+    arithmetic as ``gaussian_score(sde, null_mu, s0)`` so the
+    classifier-free ``scale=0`` path can be asserted bit-identical to
+    the unconditional solve."""
+    mus = jnp.asarray(mus, jnp.float32)
+
+    def score(x: Array, t: Array, y: Array | None = None) -> Array:
+        m, std = sde.marginal(t)
+        m = m.reshape((-1,) + (1,) * (x.ndim - 1))
+        std = std.reshape((-1,) + (1,) * (x.ndim - 1))
+        if y is None:
+            mu_y = jnp.full((x.shape[0],), null_mu, jnp.float32)
+        else:
+            mu_y = jnp.where(y < 0, jnp.float32(null_mu),
+                             mus[jnp.clip(y, 0, mus.shape[0] - 1)])
+        mu_y = mu_y.reshape((-1,) + (1,) * (x.ndim - 1))
+        return -(x - m * mu_y) / (m * m * s0 * s0 + std * std)
+
+    return score
+
+
 def gaussian_noise_pred(sde: SDE, mu: float = 0.3, s0: float = 0.5):
     """The same exact score as a ``forward_fn(params, x, t)`` in
     ``make_sample_step``'s noise-prediction convention (score = -out/std).

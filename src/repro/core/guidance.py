@@ -1,0 +1,412 @@
+"""Controlled generation: composable score-field transforms (DESIGN.md §9).
+
+The adaptive solver integrates *whatever score field it is handed* —
+its tolerance-driven step control (two score evaluations, Eq. 4/5 error
+estimate) never inspects where the score came from. Song et al. (2021,
+App. I) show that the classic controllable-generation scenarios all
+reduce to sampling a modified score field:
+
+  * **classifier-free guidance** — replace s(x,t) with
+    s_u + w·(s_c − s_u), a pure score-field transform;
+  * **inpainting** — sample the unconditional field but *project* the
+    observed coordinates onto the forward marginal of the observation
+    after every accepted step;
+  * **colorization** — inpainting in a rotated channel basis where the
+    observed coordinate is the gray component.
+
+This module is the seam that makes those scenarios (and every future
+one: super-resolution, editing, restoration) first-class in the
+sampling/serving stack. A conditioner splits into two halves:
+
+  * the **static half** — a :class:`Conditioner` instance: hashable,
+    array-free, registered as a static pytree. It lives in
+    ``AdaptiveConfig.conditioner`` and rides through jit closures
+    without tracing, exactly like a ``PrecisionPolicy`` (DESIGN.md §8).
+  * the **per-sample payload** (``cond``) — a pytree of arrays whose
+    leaves all carry a leading batch dim (labels ``(B,)``, masks
+    ``(B, …)``). It lives in ``SolverCarry.cond``, travels through
+    ``solve_chunk`` untouched, and is compacted/admitted per-slot by
+    the serving loop alongside x and the per-slot PRNG keys
+    (DESIGN.md §7/§9: condition leaves move with their samples,
+    shard-locally, like keys).
+
+Guardrails (DESIGN.md §9): ``conditioner=None`` (the default
+everywhere) leaves every code path bit-identical to the unconditional
+stack — no extra noise draws, no extra casts; ``classifier_free`` with
+``scale=0`` degenerates to the unconditional score; ``inpaint`` with
+``mask=None`` returns no conditioner at all. Projection math always
+runs in fp32, under every precision preset — condition payloads are
+control-path data, never stored at a reduced state dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: sentinel class id meaning "unconditional" in a classifier-free payload
+NULL_LABEL = -1
+
+
+def _expand(v: Array, x: Array) -> Array:
+    """(B,) → (B, 1, 1, ...) to broadcast against x."""
+    return v.reshape(v.shape + (1,) * (x.ndim - v.ndim))
+
+
+def _f32(*arrays):
+    return tuple(a.astype(jnp.float32) for a in arrays)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Conditioner:
+    """Protocol for score-field conditioning (DESIGN.md §9).
+
+    Subclasses override some of the four hooks below; the base class is
+    the identity conditioner (every hook a no-op), so a subclass only
+    pays for what it uses. Instances must stay array-free — per-sample
+    arrays belong in the ``cond`` payload pytree, which every hook
+    receives alongside the state. The class is registered static, so a
+    conditioner inside ``AdaptiveConfig`` hashes/compares by value and
+    never becomes a traced input.
+
+    Hooks:
+      * :meth:`wrap_score` — transform the score field given the batch
+        payload; called inside the solver body with ``carry.cond``.
+      * :meth:`project` — post-accept state projection at the slot's
+        *new* time t (DESIGN.md §9 explains why projection must come
+        after acceptance, never inside the proposal).
+      * :meth:`finalize_project` — exact (noise-free) constraint
+        replacement applied by ``finalize`` after the Tweedie denoise.
+      * :meth:`cond_struct` — the payload's abstract structure, used by
+        the serving loop (neutral payload for idle slots) and the
+        sharding layer (batch-axis specs per leaf).
+    """
+
+    #: set by subclasses whose :meth:`project` does real work; the
+    #: solver draws projection noise (an extra per-iteration PRNG draw)
+    #: only when this is True, keeping unconditional noise streams
+    #: untouched.
+    has_projection = False
+
+    def wrap_score(
+        self, score_fn: Callable, cond: Any
+    ) -> Callable[[Array, Array], Array]:
+        """Return the transformed score field for payload ``cond``.
+
+        The default is the identity — projection-only conditioners
+        leave the score field alone.
+        """
+        return score_fn
+
+    def project(self, sde, x: Array, t: Array, cond: Any, z: Array) -> Array:
+        """Project state ``x`` at per-sample times ``t`` onto the
+        constraint manifold, re-noising observed data to time t with the
+        fp32 standard-normal draw ``z``. Returns fp32; the solver casts
+        back to the state dtype. Identity by default."""
+        return x
+
+    def finalize_project(self, x: Array, cond: Any) -> Array:
+        """Exact constraint replacement on the delivered sample (no
+        re-noising) — applied after the Tweedie denoise. Identity by
+        default."""
+        return x
+
+    def cond_struct(self, batch: int, sample_shape) -> Any:
+        """Abstract payload pytree (``jax.ShapeDtypeStruct`` leaves,
+        leading dim ``batch``), or None when the conditioner carries no
+        payload."""
+        return None
+
+    def neutral_cond(self, batch: int, sample_shape) -> Any:
+        """A concrete payload that makes the conditioner a no-op — the
+        serving loop's idle-slot filler and its fallback for requests
+        submitted without a payload. The base default is all-zeros
+        (zero mask ⇒ projection is the exact identity); subclasses
+        whose zeros are *not* neutral must override (``ClassifierFree``
+        uses the null label)."""
+        struct = self.cond_struct(batch, sample_shape)
+        if struct is None:
+            return None
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), struct
+        )
+
+
+# ---------------------------------------------------------------------------
+# classifier-free guidance
+# ---------------------------------------------------------------------------
+
+
+def classifier_free(
+    cond_score: Callable[[Array, Array], Array],
+    uncond_score: Callable[[Array, Array], Array],
+    scale: float,
+) -> Callable[[Array, Array], Array]:
+    """Functional classifier-free transform: s_u + w·(s_c − s_u).
+
+    The composable score-field form (DESIGN.md §9): both inputs and the
+    output have the plain ``s(x, t)`` signature, so the result drops
+    into ``sample()`` / any solver / another transform unchanged. The
+    combination runs in fp32 and is cast back to the unconditional
+    score's dtype.
+
+    ``scale == 0`` returns ``uncond_score`` itself — the same callable,
+    hence bit-identical to the unconditional path by construction.
+
+    When both fields come from one label-aware network, use
+    :class:`ClassifierFree` (the payload/conditioner form) instead: it
+    evaluates the pair as a single stacked forward.
+    """
+    if scale == 0.0:
+        return uncond_score
+
+    def guided(x: Array, t: Array) -> Array:
+        s_u = uncond_score(x, t)
+        s_c = cond_score(x, t)
+        u32, c32 = _f32(s_u, s_c)
+        return (u32 + scale * (c32 - u32)).astype(s_u.dtype)
+
+    return guided
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class ClassifierFree(Conditioner):
+    """Classifier-free guidance over a label-aware score field
+    (DESIGN.md §9).
+
+    The base score function must accept a trailing label vector:
+    ``score_fn(x, t, y)`` with ``y`` int32 ``(B,)`` and ``y ==
+    null_label`` meaning unconditional (``repro.models.dit.make_score_fn``
+    produces this signature when ``DiTConfig.num_classes > 0``). The
+    payload is ``{"label": (B,) int32}`` — one class id per slot, moved
+    with its sample by the serving loop's compaction.
+
+    The guided field is evaluated as **one batched forward** in an
+    in-kernel-friendly layout: the batch is doubled to ``[x; x]`` with
+    labels ``[y; null]``, the network runs once over 2B contiguous
+    rows (no interleaving — each half keeps the original row order, so
+    a batch-sharded forward splits without resharding), and the two
+    halves combine as s_u + w·(s_c − s_u) in fp32.
+
+    ``scale == 0`` skips the doubling entirely and evaluates the single
+    null-labeled forward — the unconditional mode of the network, at
+    unconditional cost.
+    """
+
+    scale: float = 1.0
+    null_label: int = NULL_LABEL
+
+    def wrap_score(self, score_fn: Callable, cond: Any) -> Callable:
+        y = cond["label"]
+        null = jnp.full_like(y, self.null_label)
+        if self.scale == 0.0:
+            return lambda x, t: score_fn(x, t, null)
+
+        def guided(x: Array, t: Array) -> Array:
+            b = x.shape[0]
+            x2 = jnp.concatenate([x, x], axis=0)
+            t2 = jnp.concatenate([t, t], axis=0)
+            y2 = jnp.concatenate([y, null], axis=0)
+            s2 = score_fn(x2, t2, y2)  # one forward over 2B rows
+            c32, u32 = _f32(s2[:b], s2[b:])
+            return (u32 + self.scale * (c32 - u32)).astype(s2.dtype)
+
+        return guided
+
+    def cond_struct(self, batch: int, sample_shape) -> Any:
+        return {"label": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def neutral_cond(self, batch: int, sample_shape) -> Any:
+        """Neutral means *unconditional*: the null label, not class 0 —
+        an all-zeros payload would guide toward a real class."""
+        return {"label": jnp.full((batch,), self.null_label, jnp.int32)}
+
+
+def class_conditional(
+    labels, scale: float, *, null_label: int = NULL_LABEL
+) -> Tuple[ClassifierFree, Any]:
+    """Build the (conditioner, payload) pair for class-conditional
+    sampling: ``sample(..., conditioner=c, cond=payload)`` (DESIGN.md
+    §9). ``labels`` is an int ``(B,)`` vector of class ids."""
+    return (
+        ClassifierFree(scale=float(scale), null_label=null_label),
+        {"label": jnp.asarray(labels, jnp.int32)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# inpainting
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Inpaint(Conditioner):
+    """Inpainting as post-accept projection (Song et al. 2021 App. I;
+    DESIGN.md §9).
+
+    Payload: ``{"mask": (B, …), "observed": (B, …)}``, both fp32 and
+    shaped like the sample; ``mask == 1`` marks observed coordinates.
+    After every *accepted* step — never inside the proposal, which
+    would corrupt the Eq. 4/5 error estimate — the observed
+    coordinates are replaced by a fresh draw from the forward marginal
+    at the slot's **own new time t** (per-sample step sizes mean every
+    slot sits at a different t, so the re-noising uses the per-slot t
+    vector and stays valid under compaction):
+
+        x ← mask · (m(t)·observed + std(t)·z) + (1 − mask) · x
+
+    in fp32 under every precision preset. ``finalize_project`` then
+    pins the observed coordinates to ``observed`` exactly (noise-free)
+    on the delivered, denoised sample. A zero mask makes both maps the
+    exact identity.
+    """
+
+    has_projection = True
+
+    def project(self, sde, x: Array, t: Array, cond: Any, z: Array) -> Array:
+        m, s = sde.marginal(t)
+        x32, mask, obs, z32, m32, s32 = _f32(
+            x, cond["mask"], cond["observed"], z, m, s
+        )
+        obs_t = _expand(m32, x32) * obs + _expand(s32, x32) * z32
+        return mask * obs_t + (1.0 - mask) * x32
+
+    def finalize_project(self, x: Array, cond: Any) -> Array:
+        mask, obs = _f32(cond["mask"], cond["observed"])
+        return (mask * obs + (1.0 - mask) * x.astype(jnp.float32)).astype(
+            x.dtype
+        )
+
+    def cond_struct(self, batch: int, sample_shape) -> Any:
+        shp = (batch,) + tuple(sample_shape)
+        sds = jax.ShapeDtypeStruct(shp, jnp.float32)
+        return {"mask": sds, "observed": sds}
+
+
+def inpaint(mask, observed) -> Tuple[Optional[Inpaint], Any]:
+    """Build the (conditioner, payload) pair for inpainting:
+    ``sample(..., conditioner=c, cond=payload)`` (DESIGN.md §9).
+
+    ``mask`` and ``observed`` are batched ``(B, …)`` arrays shaped like
+    the samples (mask 1 = keep observed). ``mask=None`` returns
+    ``(None, None)`` — no conditioner object at all, so the call site
+    degrades to the bit-identical unconditional path.
+    """
+    if mask is None:
+        return None, None
+    return Inpaint(), {
+        "mask": jnp.asarray(mask, jnp.float32),
+        "observed": jnp.asarray(observed, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# colorization — inpainting in a rotated channel basis
+# ---------------------------------------------------------------------------
+
+
+def gray_basis(channels: int) -> Array:
+    """Orthonormal channel basis whose first row is the gray direction
+    1/√C — the decoupling transform of Song et al. 2021 App. I.2
+    (DESIGN.md §9). Deterministic (Householder reflection mapping
+    e₀ → 1/√C), fp32, constant-folded under jit."""
+    import numpy as np
+
+    c = int(channels)
+    g = np.full((c,), 1.0 / np.sqrt(c))
+    v = g - np.eye(c)[0]
+    n2 = float(v @ v)
+    m = np.eye(c) if n2 < 1e-12 else np.eye(c) - 2.0 * np.outer(v, v) / n2
+    # rows: m @ e0 = g ⇒ use m as the basis with row 0 = gray direction
+    return jnp.asarray(m.T, jnp.float32)
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Colorize(Conditioner):
+    """Colorization as a channel-space mask instance of inpainting
+    (DESIGN.md §9).
+
+    Rotate the trailing channel axis by the orthonormal
+    :func:`gray_basis`; in that basis the observed coordinate is a
+    single channel — the gray component u₀ = ⟨x, 1⟩/√C — and the
+    projection is exactly :class:`Inpaint`'s, applied to u₀: after every
+    accepted step, u₀ ← m(t)·gray + std(t)·z at the slot's own t (fp32),
+    then rotate back. Payload: ``{"gray": (B, …, 1) fp32}`` — the known
+    gray image, one channel. ``finalize_project`` pins u₀ = gray
+    exactly on the delivered sample.
+    """
+
+    has_projection = True
+    channels: int = 3
+
+    def project(self, sde, x: Array, t: Array, cond: Any, z: Array) -> Array:
+        basis = gray_basis(self.channels)
+        m, s = sde.marginal(t)
+        x32, gray, z32, m32, s32 = _f32(x, cond["gray"], z, m, s)
+        u = jnp.einsum("...c,dc->...d", x32, basis)
+        gray_t = _expand(m32, gray) * gray + _expand(s32, gray) * z32[..., :1]
+        u = jnp.concatenate([gray_t, u[..., 1:]], axis=-1)
+        return jnp.einsum("...d,dc->...c", u, basis)
+
+    def finalize_project(self, x: Array, cond: Any) -> Array:
+        basis = gray_basis(self.channels)
+        x32, gray = _f32(x, cond["gray"])
+        u = jnp.einsum("...c,dc->...d", x32, basis)
+        u = jnp.concatenate([gray, u[..., 1:]], axis=-1)
+        return jnp.einsum("...d,dc->...c", u, basis).astype(x.dtype)
+
+    def cond_struct(self, batch: int, sample_shape) -> Any:
+        shp = (batch,) + tuple(sample_shape[:-1]) + (1,)
+        return {"gray": jax.ShapeDtypeStruct(shp, jnp.float32)}
+
+
+def colorize(gray, channels: int = 3) -> Tuple[Optional[Colorize], Any]:
+    """Build the (conditioner, payload) pair for colorization:
+    ``gray`` is the known gray component ⟨x, 1⟩/√C, batched ``(B, …, 1)``
+    (a trailing singleton channel; ``(B, …)`` is auto-expanded). Use
+    :func:`to_gray` to compute it from a reference image (DESIGN.md §9).
+    ``gray=None`` returns ``(None, None)``."""
+    if gray is None:
+        return None, None
+    g = jnp.asarray(gray, jnp.float32)
+    if g.shape[-1] != 1:
+        g = g[..., None]
+    return Colorize(channels=channels), {"gray": g}
+
+
+def to_gray(x, channels: int = 3) -> Array:
+    """Gray component of a color image in the :func:`gray_basis`
+    convention (DESIGN.md §9): ⟨x, 1⟩/√C over the trailing channel
+    axis, keepdims."""
+    basis = gray_basis(channels)
+    return jnp.einsum("...c,c->...", x.astype(jnp.float32),
+                      basis[0])[..., None]
+
+
+# ---------------------------------------------------------------------------
+# payload plumbing shared by solver / sharding / serving
+# ---------------------------------------------------------------------------
+
+
+def cond_batch(cond: Any) -> Optional[int]:
+    """Leading (batch) dim shared by every payload leaf, or None for an
+    empty payload. Raises if leaves disagree — a payload whose leaves
+    straddle batches cannot be compacted per-slot (DESIGN.md §9)."""
+    leaves = jax.tree_util.tree_leaves(cond)
+    if not leaves:
+        return None
+    sizes = {int(l.shape[0]) for l in leaves}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"condition payload leaves disagree on the batch dim: {sizes}"
+        )
+    return sizes.pop()

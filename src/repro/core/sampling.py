@@ -49,10 +49,11 @@ def _finalize_jit(sde, score_fn):
     instead of retracing a fresh lambda per call; the small LRU bound
     keeps one-shot closures (and the params they capture) from being
     retained for the process lifetime the way a global jit with static
-    args would."""
+    args would. ``conditioner`` is static like ``precision``: both are
+    hashable, array-free policy objects (DESIGN.md §8/§9)."""
     return jax.jit(
         functools.partial(finalize, sde, score_fn),
-        static_argnames=("denoise", "precision"),
+        static_argnames=("denoise", "precision", "conditioner"),
     )
 
 
@@ -65,23 +66,35 @@ def sample(
     method: str = "adaptive",
     denoise: bool = True,
     mesh=None,
+    cond=None,
     **solver_kwargs,
 ) -> SolveResult:
-    """Generate ``shape[0]`` samples of shape ``shape[1:]``.
+    """Generate ``shape[0]`` samples of shape ``shape[1:]`` — the single
+    entry point tying the paper↔code map together (DESIGN.md §1, §3).
 
     Args:
       sde: forward process whose reverse we solve.
-      score_fn: s(x, t) with t a (B,) vector.
+      score_fn: s(x, t) with t a (B,) vector (with a ``ClassifierFree``
+        conditioner: s(x, t, y) — DESIGN.md §9).
       shape: full batch shape, e.g. (64, 32, 32, 3).
       method: 'adaptive' | 'em' | 'pc' | 'ode' | 'ddim'.
       mesh: optional ``jax.sharding.Mesh``; shards the batch axis of the
         prior draw and (for solvers that accept a ``sharding`` kwarg) the
         whole solver loop over the mesh's data axes. Falls back to
         replication when ``shape[0]`` does not divide the data axes.
+      cond: optional per-sample condition payload (DESIGN.md §9),
+        consumed by the ``conditioner`` in ``AdaptiveConfig`` (pass
+        ``config=AdaptiveConfig(conditioner=...)`` or the
+        ``conditioner=...`` kwarg override). Adaptive-solver-only; for
+        the fixed-grid baselines use the functional
+        ``repro.core.guidance.classifier_free`` transform, which needs
+        no solver support.
     """
     k_prior, k_solve = jax.random.split(key)
     x_init = sde.prior_sample(k_prior, shape)
     solver = get_solver(method)
+    if cond is not None:
+        solver_kwargs["cond"] = cond
     if mesh is not None:
         from repro.parallel.sharding import sample_state_shardings
 
@@ -102,11 +115,13 @@ def solve_in_chunks(
     config: AdaptiveConfig | None = None,
     denoise: bool = True,
     mesh=None,
+    cond=None,
     on_sync: Callable | None = None,
     chunk_fn: Callable | None = None,
     **overrides,
 ) -> SolveResult:
-    """Adaptive solve as a host-driven chain of bounded device chunks.
+    """Adaptive solve as a host-driven chain of bounded device chunks
+    (DESIGN.md §7).
 
     Each chunk runs at most ``max_sync_iters`` Algorithm-1 iterations
     device-side, then yields the ``SolverCarry`` to the host;
@@ -120,6 +135,10 @@ def solve_in_chunks(
     pass ``chunk_fn`` — a prebuilt jitted ``carry -> carry`` chunk (what
     the serving loop does via ``make_sample_step``) — to amortize the
     compile across calls.
+
+    ``cond`` is the optional per-sample condition payload for
+    ``cfg.conditioner`` (DESIGN.md §9); it rides in the carry through
+    every chunk, exactly as the serving loop's compaction expects.
     """
     cfg = resolve_config(config, overrides)
     k_prior, k_solve = jax.random.split(key)
@@ -130,7 +149,8 @@ def solve_in_chunks(
 
         sharding, _, _ = sample_state_shardings(mesh, shape[0], len(shape))
         x_init = jax.lax.with_sharding_constraint(x_init, sharding)
-    carry = init_carry(sde, x_init, k_solve, config=cfg, sharding=sharding)
+    carry = init_carry(sde, x_init, k_solve, config=cfg, sharding=sharding,
+                       cond=cond)
     chunk = chunk_fn or jax.jit(
         lambda c: solve_chunk(
             sde, score_fn, c,
@@ -144,7 +164,8 @@ def solve_in_chunks(
         if on_sync is not None:
             on_sync(carry)
     return _finalize_jit(sde, score_fn)(carry, denoise=denoise,
-                                        precision=cfg.precision)
+                                        precision=cfg.precision,
+                                        conditioner=cfg.conditioner)
 
 
 def sample_chunked(
@@ -162,8 +183,8 @@ def sample_chunked(
     """Generate many samples in fixed-size chunks (host loop, jit inner).
 
     Returns (samples (N, ...), mean NFE) — used by the FID-style
-    benchmarks that need tens of thousands of samples. ``mesh`` shards
-    each chunk's batch axis, as in ``sample``.
+    benchmarks (DESIGN.md §6) that need tens of thousands of samples.
+    ``mesh`` shards each chunk's batch axis, as in ``sample``.
     """
     fn = jax.jit(
         lambda k: sample(

@@ -28,6 +28,13 @@ two numerically identical implementations:
   * the fused Pallas kernel ``repro.kernels.solver_step`` (one HBM pass,
     in-VMEM error reduction) selected with ``use_fused_kernel=True``.
 
+Conditioning seam (DESIGN.md §9): ``AdaptiveConfig.conditioner`` plus
+the carry's per-slot ``cond`` payload turn the same loop into guided /
+inpainting / class-conditional sampling — the conditioner transforms
+the score field inside the loop body and projects observed data after
+every accepted step; ``conditioner=None`` is bit-identical to the
+unconditional solver.
+
 Precision policy (DESIGN.md §8): ``AdaptiveConfig.precision`` selects a
 ``repro.core.precision.PrecisionPolicy``. The carry's x / x_prev live in
 ``state_dtype`` and the score network runs in ``compute_dtype``, while
@@ -42,11 +49,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.guidance import Conditioner, cond_batch
 from repro.core.precision import PrecisionPolicy, resolve_policy
 from repro.core.sde import SDE
 from repro.core.tolerance import (
@@ -77,6 +85,11 @@ class AdaptiveConfig:
     #: precision preset name or PrecisionPolicy (DESIGN.md §8); "fp32"
     #: (the default) is bit-identical to the policy-free solver
     precision: "str | PrecisionPolicy" = "fp32"
+    #: score-field conditioner (DESIGN.md §9) — the *static* half of a
+    #: controlled-generation scenario (guidance scale, projection rule);
+    #: the per-sample payload rides in ``SolverCarry.cond``. None (the
+    #: default) is bit-identical to the unconditional solver.
+    conditioner: Optional[Conditioner] = None
 
 
 def _expand(v: Array, x: Array) -> Array:
@@ -175,6 +188,13 @@ class SolverCarry:
       done: per-sample convergence mask as of the last executed
          iteration, shape (B,) bool.
       iterations: total body iterations executed so far, scalar int32.
+      cond: optional per-slot condition payload (DESIGN.md §9) — a
+         pytree whose leaves all have leading dim B (labels (B,), masks
+         (B, ...)), consumed by ``AdaptiveConfig.conditioner``. It
+         rides through ``solve_chunk`` untouched and the serving loop
+         compacts/admits its leaves per-slot alongside x and the
+         per-slot keys, so a sample's conditioning travels with it.
+         None (the default) for unconditional solves.
     """
 
     x: Array
@@ -187,6 +207,7 @@ class SolverCarry:
     rejected: Array
     done: Array
     iterations: Array
+    cond: Any = None
 
     @property
     def batch(self) -> int:
@@ -204,18 +225,33 @@ def init_carry(
     *,
     config: AdaptiveConfig | None = None,
     sharding=None,
+    cond=None,
     **overrides,
 ) -> SolverCarry:
     """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot.
 
     x is cast to the policy's ``state_dtype`` (no-op under fp32); t / h /
-    counters are always fp32 / int32 (control path).
+    counters are always fp32 / int32 (control path). ``cond`` is the
+    optional per-slot condition payload (DESIGN.md §9): every leaf must
+    lead with the batch dim; leaves keep their own dtype (fp32 — the
+    projection/guidance math is control-path, never state-dtype).
     """
     cfg = resolve_config(config, overrides)
     policy = resolve_policy(cfg.precision)
     x_init = x_init.astype(policy.state)
     c_arr, c_vec = _constraints(sharding)
     batch = x_init.shape[0]
+    if cond is not None:
+        cb = cond_batch(cond)
+        if cb is not None and cb != batch:
+            raise ValueError(
+                f"condition payload batch {cb} != state batch {batch}"
+            )
+        cond = jax.tree_util.tree_map(
+            lambda l: c_arr(l) if l.ndim == x_init.ndim
+            else (c_vec(l) if l.ndim == 1 else l),
+            cond,
+        )
     t0 = c_vec(jnp.full((batch,), sde.T, jnp.float32))
     h0 = c_vec(
         jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
@@ -233,6 +269,7 @@ def init_carry(
         rejected=zeros,
         done=c_vec(jnp.zeros((batch,), bool)),
         iterations=jnp.asarray(0, jnp.int32),
+        cond=cond,
     )
 
 
@@ -286,7 +323,17 @@ def _draw_noise(key: Array, x: Array):
 
 
 def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
-    """One Algorithm-1 iteration: SolverCarry → SolverCarry."""
+    """One Algorithm-1 iteration: SolverCarry → SolverCarry.
+
+    ``score_fn`` arrives *raw*: the body composes the conditioner's
+    score-field transform (innermost, so a label-aware score sees real
+    labels — DESIGN.md §9) and then the precision policy's cast seam
+    (outermost, DESIGN.md §8) around it. With ``cfg.conditioner=None``
+    the composition collapses to exactly the pre-conditioning wrapping.
+    """
+    conditioner = cfg.conditioner
+    policy = resolve_policy(cfg.precision)
+    projecting = conditioner is not None and conditioner.has_projection
 
     def em_coeffs(t, h):
         """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars)."""
@@ -296,6 +343,10 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
 
     def body(s: SolverCarry) -> SolverCarry:
         x, x_prev, t, h = s.x, s.x_prev, s.t, s.h
+        sf = score_fn
+        if conditioner is not None:
+            sf = conditioner.wrap_score(sf, s.cond)
+        sf = policy.wrap_score_fn(sf)
         active = t > sde.t_eps + 1e-12
         # Clamp the times fed to the score net for frozen samples.
         t_c = jnp.clip(t, sde.t_eps, sde.T)
@@ -304,12 +355,17 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
 
         key, z = _draw_noise(s.key, x)
         z = c_arr(z)
+        if projecting:
+            # projection noise is its own draw, taken only when a
+            # projecting conditioner is active — the unconditional noise
+            # stream is untouched by the conditioning seam
+            key, z_proj = _draw_noise(key, x)
 
         # --- low-order proposal: one reverse-EM step --------------------
         # coefficients are fp32 control values, so the EM arithmetic
         # promotes to fp32 even for bf16 state; the result is stored back
         # at the state dtype (no-op under fp32 policies)
-        score1 = score_fn(x, t_c)
+        score1 = sf(x, t_c)
         c0, c1, c2 = em_coeffs(t_c, h_c)
         x_prime = c_arr(
             (
@@ -318,7 +374,7 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         )
 
         # --- high-order proposal: stochastic Improved Euler -------------
-        score2 = score_fn(x_prime, t2)
+        score2 = sf(x_prime, t2)
         e0 = h_c * sde.drift_coeff(t2)
         g2 = sde.diffusion(t2)
         d1 = h_c * g2 * g2
@@ -335,6 +391,17 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         x_new = c_arr(jnp.where(acc_e, proposal, x))
         x_prev_new = c_arr(jnp.where(acc_e, x_prime, x_prev))
         t_new = c_vec(jnp.where(accept, t - h, t))
+
+        if projecting:
+            # post-accept projection (DESIGN.md §9): observed data is
+            # re-noised to each slot's *new* time t − h, in fp32 under
+            # every precision preset, and only accepted slots move —
+            # projecting inside the proposal would corrupt the Eq. 4/5
+            # error estimate, and projecting rejected slots would drift
+            # state the controller decided not to advance. x'_prev stays
+            # unprojected: the mixed tolerance tracks the raw field.
+            projected = conditioner.project(sde, x_new, t_new, s.cond, z_proj)
+            x_new = c_arr(jnp.where(acc_e, projected.astype(x.dtype), x_new))
 
         remaining = jnp.maximum(t_new - sde.t_eps, 0.0)
         h_new = next_step_size(
@@ -356,6 +423,7 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
             ),
             done=c_vec(t_new <= sde.t_eps + 1e-12),
             iterations=s.iterations + 1,
+            cond=s.cond,
         )
 
     return body
@@ -396,10 +464,11 @@ def solve_chunk(
     policy's compute dtype on entry and the score casts to the state
     dtype on exit — policy-aware score functions (built with
     ``make_score_fn(..., policy=...)``) see idempotent casts.
+    ``cfg.conditioner`` (DESIGN.md §9) composes *inside* that cast pair,
+    consuming ``carry.cond``; with a ``ClassifierFree`` conditioner the
+    raw ``score_fn`` must be label-aware (``s(x, t, y)``).
     """
     cfg = resolve_config(config, overrides)
-    policy = resolve_policy(cfg.precision)
-    score_fn = policy.wrap_score_fn(score_fn)
     eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
     c_arr, c_vec = _constraints(sharding)
     body = _make_body(
@@ -424,20 +493,31 @@ def finalize(
     *,
     denoise: bool = True,
     precision: "str | PrecisionPolicy" = "fp32",
+    conditioner: Optional[Conditioner] = None,
 ) -> SolveResult:
     """SolveResult from a finished carry (+ the paper's Tweedie denoise).
 
     Under a precision policy the final score evaluation runs in the
     compute dtype like every other, but the Tweedie arithmetic itself is
     fp32 — the denoised delivery is never quantized by the state dtype.
+
+    With a ``conditioner`` (DESIGN.md §9) the denoising score is the
+    *conditioned* field (consuming ``carry.cond``), and the delivered
+    sample gets the conditioner's exact, noise-free constraint
+    replacement (``finalize_project``) — e.g. inpainting pins observed
+    pixels to the observation exactly at t_eps.
     """
     policy = resolve_policy(precision)
+    if conditioner is not None:
+        score_fn = conditioner.wrap_score(score_fn, carry.cond)
     x, nfe = carry.x, carry.nfe
     if denoise:
         t = jnp.full((carry.batch,), sde.t_eps)
         score = score_fn(policy.to_compute(x), t).astype(jnp.float32)
         x = sde.tweedie_denoise(x.astype(jnp.float32), score)
         nfe = nfe + 1
+    if conditioner is not None:
+        x = conditioner.finalize_project(x, carry.cond)
     return SolveResult(
         x=x,
         nfe=nfe,
@@ -457,6 +537,7 @@ def adaptive(
     config: AdaptiveConfig | None = None,
     denoise: bool = True,
     sharding=None,
+    cond=None,
     **overrides,
 ) -> SolveResult:
     """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively.
@@ -464,6 +545,10 @@ def adaptive(
     One maximal ``solve_chunk`` over a fresh ``SolverCarry`` — the
     monolithic reference that horizon-chunked solves must reproduce
     bit-for-bit.
+
+    ``cond`` is the optional per-sample condition payload consumed by
+    ``cfg.conditioner`` (DESIGN.md §9); both default to None, the
+    bit-identical unconditional path.
 
     ``sharding`` (a batch-axis NamedSharding, normally produced by
     ``repro.parallel.sharding.sample_state_shardings`` and threaded down
@@ -475,13 +560,14 @@ def adaptive(
     PRNG is sharding-invariant.
     """
     cfg = resolve_config(config, overrides)
-    carry = init_carry(sde, x_init, key, config=cfg, sharding=sharding)
+    carry = init_carry(sde, x_init, key, config=cfg, sharding=sharding,
+                       cond=cond)
     carry = solve_chunk(
         sde, score_fn, carry,
         max_sync_iters=cfg.max_iters, config=cfg, sharding=sharding,
     )
     return finalize(sde, score_fn, carry, denoise=denoise,
-                    precision=cfg.precision)
+                    precision=cfg.precision, conditioner=cfg.conditioner)
 
 
 # ---------------------------------------------------------------------------

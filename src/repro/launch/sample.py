@@ -119,15 +119,26 @@ def make_sample_step(net: DiTConfig, sde, cfg: AdaptiveConfig,
     fp32, and ``solve_chunk`` keeps the carry at the state dtype. A
     custom ``forward_fn`` is responsible for its own compute casting
     (``solve_chunk`` still casts its x input / score output).
+
+    ``cfg.conditioner`` threads through the same way (DESIGN.md §9):
+    ``solve_chunk`` consumes the carry's per-slot condition payload.
+    With a ``ClassifierFree`` conditioner the score must be label-aware,
+    so the step's score_fn forwards ``y`` whenever ``forward_fn``
+    declares it (the default DiT forward does).
     """
     policy = resolve_policy(cfg.precision)
     if forward_fn is None:
-        forward_fn = lambda p, x, t: dit_forward(p, x, t, net, policy=policy)
+        forward_fn = lambda p, x, t, y=None: dit_forward(
+            p, x, t, net, policy=policy, y=y)
+    import inspect
+
+    accepts_y = "y" in inspect.signature(forward_fn).parameters
 
     def sample_step(params, carry, max_sync_iters: int = 1):
-        def score_fn(x, t):
+        def score_fn(x, t, y=None):
             _, std = sde.marginal(t)
-            out = forward_fn(params, x, t).astype(jnp.float32)
+            out = (forward_fn(params, x, t, y=y) if accepts_y
+                   else forward_fn(params, x, t)).astype(jnp.float32)
             return -out / std.reshape((-1,) + (1,) * (x.ndim - 1))
 
         return solve_chunk(
@@ -388,6 +399,63 @@ def demo(precision: str = "fp32") -> None:
               f"finite={bool(jnp.all(jnp.isfinite(res.x)))}")
 
 
+def demo_cfg(scale: float, precision: str = "fp32") -> None:
+    """Class-conditional demo (DESIGN.md §9): a train-free class-
+    conditional DiT sampled with classifier-free guidance — one doubled
+    batched forward per score evaluation, labels cycling 0..9."""
+    from repro.core.guidance import class_conditional
+
+    net = DiTConfig(image_size=16, patch=4, d_model=96, num_layers=2,
+                    num_heads=4, d_ff=256, num_classes=10)
+    sde = VPSDE()
+    key = jax.random.PRNGKey(0)
+    policy = resolve_policy(precision)
+    params = init_dit(net, key)
+    score = make_score_fn(params, net, sde, policy=policy)
+    conditioner, cond = class_conditional(jnp.arange(8) % 10, scale)
+    res = jax.jit(lambda k: sample(
+        sde, score, (8, 16, 16, 3), k, method="adaptive",
+        config=AdaptiveConfig(eps_rel=0.05, precision=precision,
+                              conditioner=conditioner),
+        cond=cond))(key)
+    print(f"cfg[scale={scale}, {policy.name}]: "
+          f"NFE {float(res.mean_nfe):.0f} "
+          f"finite={bool(jnp.all(jnp.isfinite(res.x)))}")
+
+
+def demo_inpaint(precision: str = "fp32") -> None:
+    """Inpainting demo (DESIGN.md §9): checkerboard-mask inpainting on
+    the train-free DiT — observed pixels are projected (re-noised to
+    each slot's own t) after every accepted step and pinned exactly at
+    delivery. No checkpoint needed; see examples/inpaint_adaptive.py
+    for the analytic-score version with exactness checks."""
+    from repro.core.guidance import inpaint as make_inpaint
+
+    net = DiTConfig(image_size=16, patch=4, d_model=96, num_layers=2,
+                    num_heads=4, d_ff=256)
+    sde = VPSDE()
+    key = jax.random.PRNGKey(0)
+    policy = resolve_policy(precision)
+    params = init_dit(net, key)
+    score = make_score_fn(params, net, sde, policy=policy)
+    yy, xx = jnp.mgrid[:16, :16]
+    mask = jnp.broadcast_to(
+        (((yy // 4 + xx // 4) % 2) == 0)[None, :, :, None],
+        (8, 16, 16, 3)).astype(jnp.float32)
+    observed = jnp.broadcast_to(
+        jnp.linspace(-0.5, 0.5, 16)[None, :, None, None], (8, 16, 16, 3))
+    conditioner, cond = make_inpaint(mask, observed)
+    res = jax.jit(lambda k: sample(
+        sde, score, (8, 16, 16, 3), k, method="adaptive",
+        config=AdaptiveConfig(eps_rel=0.05, precision=precision,
+                              conditioner=conditioner),
+        cond=cond))(key)
+    resid = float(jnp.abs((res.x - observed) * mask).max())
+    print(f"inpaint[{policy.name}]: NFE {float(res.mean_nfe):.0f} "
+          f"observed-pixel residual {resid:.2e} "
+          f"finite={bool(jnp.all(jnp.isfinite(res.x)))}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true")
@@ -402,12 +470,22 @@ def main() -> None:
     ap.add_argument("--precision", choices=sorted(PRESETS), default="fp32",
                     help="precision policy (DESIGN.md §8): network/state "
                          "dtypes; error control always stays fp32")
+    ap.add_argument("--cfg-scale", type=float, default=None,
+                    help="demo classifier-free guidance at this scale "
+                         "on a class-conditional DiT (DESIGN.md §9)")
+    ap.add_argument("--inpaint", action="store_true",
+                    help="demo checkerboard-mask inpainting "
+                         "(post-accept projection, DESIGN.md §9)")
     args = ap.parse_args()
     if args.dryrun:
         dryrun(args.multi_pod, args.batch, pipeline=args.pipeline,
                precision=args.precision)
     elif args.dryrun_loop:
         dryrun_loop(args.batch, precision=args.precision)
+    elif args.cfg_scale is not None:
+        demo_cfg(args.cfg_scale, precision=args.precision)
+    elif args.inpaint:
+        demo_inpaint(precision=args.precision)
     else:
         demo(precision=args.precision)
 

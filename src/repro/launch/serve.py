@@ -80,7 +80,8 @@ def serve_batch(
 
 def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
                     sync_horizon: int = 4, compaction: bool = True,
-                    precision: str = "fp32") -> dict:
+                    precision: str = "fp32", inpaint: bool = False,
+                    cfg_scale: float | None = None) -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
@@ -90,30 +91,62 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     converged slots retired and refilled at every sync (DESIGN.md §7).
     Returns (and prints) throughput, the wasted-NFE fraction, and the
     per-device refill counts that evidence shard-local compaction.
+
+    Per-request conditioning (DESIGN.md §9): ``inpaint=True`` attaches
+    a checkerboard mask (phase alternating per request) to every
+    request; ``cfg_scale`` switches to a class-conditional DiT with
+    classifier-free guidance, labels cycling per request uid. The
+    conditioner is per-server (one compiled program); the payload is
+    per-request and travels with its slot through compaction.
     """
     from repro.core import AdaptiveConfig, VPSDE
+    from repro.core.guidance import ClassifierFree, Inpaint
     from repro.core.precision import resolve_policy
     from repro.launch.sample import make_sample_step
     from repro.models.dit import DiTConfig, init_dit
     from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
 
+    if inpaint and cfg_scale is not None:
+        raise ValueError("pick one conditioner per server: "
+                         "--inpaint or --cfg-scale")
     ndev = jax.device_count()
     mesh = jax.make_mesh((ndev,), ("data",))
+    num_classes = 10 if cfg_scale is not None else 0
     net = DiTConfig(image_size=image_size, patch=4, d_model=32, num_layers=2,
-                    num_heads=2, d_ff=64)
+                    num_heads=2, d_ff=64, num_classes=num_classes)
     sde = VPSDE()
     policy = resolve_policy(precision)
-    cfg = AdaptiveConfig(eps_rel=0.05, precision=precision)
+    conditioner = None
+    if inpaint:
+        conditioner = Inpaint()
+    elif cfg_scale is not None:
+        conditioner = ClassifierFree(scale=float(cfg_scale))
+    cfg = AdaptiveConfig(eps_rel=0.05, precision=precision,
+                         conditioner=conditioner)
     # weights stored at the policy's param dtype; the per-device weight
     # HBM and weight-broadcast bytes halve under bf16_full
     params = policy.cast_params(init_dit(net, jax.random.PRNGKey(0)))
     step = make_sample_step(net, sde, cfg)
-    b = DiffusionBatcher(sde, step, params,
-                         (image_size, image_size, net.channels),
+    shape = (image_size, image_size, net.channels)
+    b = DiffusionBatcher(sde, step, params, shape,
                          slots=slots, cfg=cfg, mesh=mesh,
                          sync_horizon=sync_horizon, compaction=compaction)
+
+    def request_cond(uid: int):
+        if inpaint:
+            yy, xx = jnp.mgrid[:image_size, :image_size]
+            mask = (((yy // 2 + xx // 2) + uid) % 2 == 0)
+            mask = jnp.broadcast_to(mask[:, :, None], shape)
+            observed = jnp.broadcast_to(
+                jnp.linspace(-0.5, 0.5, image_size)[:, None, None], shape)
+            return {"mask": mask.astype(jnp.float32),
+                    "observed": jnp.asarray(observed, jnp.float32)}
+        if cfg_scale is not None:
+            return {"label": uid % num_classes}
+        return None
+
     for uid in range(requests):
-        b.submit(ImageRequest(uid=uid, seed=uid))
+        b.submit(ImageRequest(uid=uid, seed=uid, cond=request_cond(uid)))
     t0 = time.time()
     done = b.run_to_completion()
     dt = time.time() - t0
@@ -125,6 +158,9 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "sync_horizon": sync_horizon,
         "compaction": compaction,
         "precision": policy.as_dict(),
+        "conditioner": ("inpaint" if inpaint
+                        else f"cfg:{cfg_scale}" if cfg_scale is not None
+                        else "none"),
         "completed": len(done),
         "samples_per_sec": len(done) / dt,
         "mean_nfe": sum(nfes) / len(nfes),
@@ -132,7 +168,7 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "wasted_nfe_fraction": b.wasted_nfe_fraction,
         "refills_per_device": list(b.refills_per_device),
     }
-    print(f"diffusion serve[{policy.name}]: "
+    print(f"diffusion serve[{policy.name}, {rec['conditioner']}]: "
           f"{rec['completed']}/{requests} requests in {dt:.1f}s "
           f"({rec['samples_per_sec']:.2f} samples/s) on {ndev} device(s), "
           f"{b.slots_per_device} slots/device, horizon {sync_horizon}, "
@@ -162,13 +198,20 @@ def main() -> None:
     ap.add_argument("--precision", default="fp32", choices=sorted(PRESETS),
                     help="precision policy for the diffusion server "
                          "(DESIGN.md §8); error control always stays fp32")
+    ap.add_argument("--inpaint", action="store_true",
+                    help="per-request checkerboard-mask inpainting "
+                         "(diffusion mode, DESIGN.md §9)")
+    ap.add_argument("--cfg-scale", type=float, default=None,
+                    help="per-request classifier-free guidance at this "
+                         "scale (diffusion mode, DESIGN.md §9)")
     args = ap.parse_args()
 
     if args.diffusion:
         serve_diffusion(slots=args.slots, requests=args.requests,
                         sync_horizon=args.sync_horizon,
                         compaction=not args.no_compaction,
-                        precision=args.precision)
+                        precision=args.precision,
+                        inpaint=args.inpaint, cfg_scale=args.cfg_scale)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

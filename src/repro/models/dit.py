@@ -51,6 +51,11 @@ class DiTConfig:
     num_heads: int = 8
     d_ff: int = 1024
     dtype: str = "float32"
+    #: class-conditional mode (DESIGN.md §9): > 0 adds a label-embedding
+    #: table with one extra null row (classifier-free training style);
+    #: 0 (the default) leaves params and forward bit-identical to the
+    #: unconditional net.
+    num_classes: int = 0
 
     @property
     def tokens(self) -> int:
@@ -93,7 +98,15 @@ def init_dit(cfg: DiTConfig, key: Array) -> Dict[str, Any]:
         }
 
     layers = jax.vmap(init_layer)(jax.random.split(ks[0], R))
+    extra = {}
+    if cfg.num_classes > 0:
+        # one embedding row per class + a trailing null row (index
+        # num_classes) for the unconditional branch of CFG sampling
+        extra["label_emb"] = 0.02 * jax.random.normal(
+            ks[6], (cfg.num_classes + 1, cfg.d_model), jnp.float32
+        ).astype(dtype)
     return {
+        **extra,
         "patch_in": dense_init(ks[1], (cfg.patch_dim, cfg.d_model), dtype),
         "pos_emb": 0.02 * jax.random.normal(ks[2], (cfg.tokens, cfg.d_model), jnp.float32).astype(dtype),
         "t_mlp1": dense_init(ks[3], (256, cfg.d_model), dtype),
@@ -124,7 +137,7 @@ def _unpatchify(t: Array, cfg: DiTConfig) -> Array:
 
 
 def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
-                policy=None) -> Array:
+                policy=None, y: Array | None = None) -> Array:
     """x (B, H, W, C), t (B,) → same-shape output (raw network output).
 
     With ``policy`` the activations (and the weight copies the matmuls
@@ -132,6 +145,12 @@ def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
     fp32 from the stored weights, and ``apply_norm`` upcasts internally,
     so only the block matmuls/attention run reduced. The output is in
     the compute dtype; ``make_score_fn`` handles the downstream cast.
+
+    ``y`` (DESIGN.md §9): optional int32 (B,) class labels for a
+    class-conditional net (``cfg.num_classes > 0``); negative labels
+    select the trailing null row (the unconditional branch of CFG).
+    The label embedding joins the conditioning path, so like the
+    timestep embedding it is added in fp32 from the stored weights.
     """
     mcfg = cfg.as_model_config()
     # fp32 timestep-embedding math from the stored (master) weights,
@@ -139,6 +158,9 @@ def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
     f32 = lambda w: w.astype(jnp.float32)
     temb = timestep_embedding(t, 256)  # fp32
     temb = jax.nn.silu(temb @ f32(params["t_mlp1"])) @ f32(params["t_mlp2"])
+    if y is not None and cfg.num_classes > 0:
+        idx = jnp.where(y < 0, cfg.num_classes, y).astype(jnp.int32)
+        temb = temb + f32(params["label_emb"])[idx]
 
     if policy is not None:
         x = x.astype(policy.compute)
@@ -166,23 +188,37 @@ def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
     return _unpatchify(h @ params["patch_out"], cfg)
 
 
-def make_score_fn(params, cfg: DiTConfig, sde, policy=None):
+def make_score_fn(params, cfg: DiTConfig, sde, policy=None,
+                  conditioner=None, cond=None):
     """Wrap the raw net into s(x,t) = net(x,t)/std(t) (noise-pred param.).
 
     With ``policy``: weights are stored at ``param_dtype``, x casts to
     ``compute_dtype`` on entry, the 1/std rescale runs in fp32 (std can
     be O(1e-2) for VE — dividing in bf16 would waste the score's
     mantissa), and the returned score is in ``state_dtype``.
+
+    When ``cfg.num_classes > 0`` the returned score is label-aware —
+    ``s(x, t, y)`` with ``y`` optional — which is the signature a
+    ``ClassifierFree`` conditioner consumes (DESIGN.md §9).
+
+    ``conditioner``/``cond`` (DESIGN.md §9) bake a *static* payload
+    into the returned field (standalone/whole-batch use: fixed labels,
+    one mask for the run). The solver/serving path instead threads the
+    payload through ``SolverCarry.cond`` and wraps per-chunk — do not
+    pass a conditioner here *and* in ``AdaptiveConfig``, that would
+    apply the transform twice.
     """
     if policy is not None:
         params = policy.cast_params(params)
 
-    def score(x: Array, t: Array) -> Array:
+    def score(x: Array, t: Array, y: Array | None = None) -> Array:
         _, std = sde.marginal(t)
         if policy is not None:
             x = policy.to_compute(x)
-        out = dit_forward(params, x, t, cfg, policy=policy)
+        out = dit_forward(params, x, t, cfg, policy=policy, y=y)
         s = -out.astype(jnp.float32) / std.reshape((-1,) + (1,) * (x.ndim - 1))
         return s if policy is None else policy.to_state(s)
 
+    if conditioner is not None:
+        return conditioner.wrap_score(score, cond)
     return score

@@ -224,7 +224,7 @@ def sample_state_shardings(mesh: Mesh, batch: int, state_ndim: int):
 
 
 def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
-                           *, per_slot_keys: bool = False):
+                           *, per_slot_keys: bool = False, cond=None):
     """A ``SolverCarry``-shaped pytree of NamedShardings (DESIGN.md §7).
 
     ``state_ndim`` is the ndim of the (B, ...) state arrays. With
@@ -232,12 +232,23 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
     alongside the state — each device owns its slots' noise streams, so
     shard-local slot compaction never touches another device's PRNG —
     otherwise the single (2,) key replicates.
+
+    ``cond`` (DESIGN.md §9) is an abstract condition-payload pytree
+    (arrays or ShapeDtypeStructs, every leaf leading with the batch
+    dim, e.g. ``Conditioner.cond_struct(batch, shape)``); each leaf
+    gets a batch-axis sharding of its own ndim, so condition payloads
+    live on the device that owns their slot — the shard-local
+    compaction rule extends to conditioning unchanged.
     """
     from repro.core.solvers.adaptive import SolverCarry
 
     arr, vec, rep = sample_state_shardings(mesh, batch, state_ndim)
     key_s = batch_sharding(mesh, batch, 2) if per_slot_keys else rep
+    cond_s = jax.tree_util.tree_map(
+        lambda l: batch_sharding(mesh, batch, l.ndim), cond,
+    ) if cond is not None else None
     return SolverCarry(
         x=arr, x_prev=arr, t=vec, h=vec, key=key_s,
         nfe=vec, accepted=vec, rejected=vec, done=vec, iterations=rep,
+        cond=cond_s,
     )

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +56,17 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class ImageRequest:
+    """One sampling request (DESIGN.md §4/§9): a seed, and optionally a
+    per-request condition payload for the server's conditioner."""
+
     uid: int
     seed: int
+    #: per-request condition payload (DESIGN.md §9): the *unbatched*
+    #: pytree this request's slot row should carry (e.g. ``{"mask":
+    #: (H, W, C), "observed": (H, W, C)}`` or ``{"label": ()}``). None
+    #: (with a conditioner configured) means the neutral payload —
+    #: zero mask / label 0, i.e. effectively unconditional.
+    cond: Any = None
     result: Optional[np.ndarray] = None
     nfe: int = 0
     done: bool = False
@@ -88,6 +97,14 @@ class DiffusionBatcher:
     compaction, and admission are dtype-agnostic — admitted priors are
     cast to the carry's dtype, and the host only ever reads the fp32
     control fields plus the retired rows.
+
+    Conditioning (DESIGN.md §9): when ``cfg.conditioner`` is set, the
+    carry grows a per-slot condition payload (``SolverCarry.cond``).
+    Idle slots hold the conditioner's neutral payload; at admission a
+    request's own ``ImageRequest.cond`` is written into its slot's
+    rows, and compaction moves condition leaves with their samples —
+    shard-locally, exactly like the per-slot PRNG keys — so a
+    request's conditioning follows it through any slot permutation.
     """
 
     def __init__(
@@ -115,6 +132,11 @@ class DiffusionBatcher:
         self.mesh = mesh
         self.sync_horizon = int(sync_horizon)
         self.compaction = bool(compaction)
+        self.conditioner = self.cfg.conditioner
+        cond_struct = (
+            None if self.conditioner is None
+            else self.conditioner.cond_struct(slots, self.shape)
+        )
         if mesh is not None:
             from repro.parallel.sharding import (
                 data_axes, solver_carry_shardings,
@@ -127,7 +149,8 @@ class DiffusionBatcher:
                     f"slots={slots} must divide across {self.n_devices} devices"
                 )
             self._carry_shardings = solver_carry_shardings(
-                mesh, slots, 1 + len(self.shape), per_slot_keys=True
+                mesh, slots, 1 + len(self.shape), per_slot_keys=True,
+                cond=cond_struct,
             )
             self.step_fn = jax.jit(
                 lambda p, c: sample_step(p, c, max_sync_iters=self.sync_horizon),
@@ -166,6 +189,9 @@ class DiffusionBatcher:
             nfe=zi, accepted=zi, rejected=zi,
             done=jnp.ones((B,), bool),
             iterations=jnp.asarray(0, jnp.int32),
+            # idle slots carry the neutral payload (zero mask / label 0)
+            cond=(None if self.conditioner is None
+                  else self.conditioner.neutral_cond(B, self.shape)),
         )
         self._carry = self._shard_carry(self._carry)
 
@@ -179,16 +205,36 @@ class DiffusionBatcher:
         )
 
     def slot_device(self, slot: int) -> int:
-        """Mesh data-axis index owning ``slot`` (contiguous block layout)."""
+        """Mesh data-axis index owning ``slot`` (contiguous block
+        layout, DESIGN.md §3)."""
         return slot // self.slots_per_device
 
+    def _request_cond(self, req: ImageRequest):
+        """An admitted request's per-sample condition rows: its own
+        ``cond`` (leaves shaped like ``cond_struct`` minus the batch
+        dim; scalars allowed for (B,) leaves) coerced to the payload
+        dtypes, or the conditioner's *neutral* payload (DESIGN.md §9 —
+        e.g. the null label for CFG, never class 0)."""
+        if req.cond is None:
+            return jax.tree_util.tree_map(
+                lambda l: l[0], self.conditioner.neutral_cond(1, self.shape)
+            )
+        struct = self.conditioner.cond_struct(1, self.shape)
+        return jax.tree_util.tree_map(
+            lambda s, l: jnp.asarray(l, s.dtype).reshape(s.shape[1:]),
+            struct, req.cond,
+        )
+
     def submit(self, req: ImageRequest) -> None:
+        """Queue a request; it enters a slot at the next sync horizon
+        with a free slot (DESIGN.md §7)."""
         self.queue.append(req)
 
     @property
     def wasted_nfe_fraction(self) -> float:
         """Fraction of issued score-net evaluations spent on idle or
-        already-converged slots so far (0 when nothing ran yet)."""
+        already-converged slots so far (0 when nothing ran yet) —
+        DESIGN.md §7 waste accounting."""
         issued = 2 * self.n * self.total_iterations
         if issued == 0:
             return 0.0
@@ -199,7 +245,8 @@ class DiffusionBatcher:
         """Fraction of evaluations issued to *occupied* slots whose sample
         had already converged — the paper's frozen-passenger waste, the
         part of ``wasted_nfe_fraction`` that only compaction (not capacity
-        provisioning) can remove. 0 when nothing was delivered yet."""
+        provisioning) can remove (DESIGN.md §7). 0 when nothing was
+        delivered yet."""
         if self.resident_nfe == 0:
             return 0.0
         return 1.0 - min(self.useful_nfe, self.resident_nfe) / self.resident_nfe
@@ -235,9 +282,16 @@ class DiffusionBatcher:
         conv_idx = [i for i in range(self.n) if conv[i]]
         if conv_idx:
             # delivery is always fp32 regardless of the state dtype
-            rows = np.asarray(
-                c.x[jnp.asarray(conv_idx)].astype(jnp.float32)
-            )
+            rows_j = c.x[jnp.asarray(conv_idx)].astype(jnp.float32)
+            if self.conditioner is not None:
+                # exact, noise-free constraint replacement on delivery
+                # (DESIGN.md §9): e.g. inpainting pins observed pixels
+                # to the observation, matching the finalize() contract
+                cond_rows = jax.tree_util.tree_map(
+                    lambda l: l[jnp.asarray(conv_idx)], c.cond
+                )
+                rows_j = self.conditioner.finalize_project(rows_j, cond_rows)
+            rows = np.asarray(rows_j)
             nfe = np.asarray(c.nfe)
             for row, i in zip(rows, conv_idx):
                 req = self._slot_req[i]
@@ -269,8 +323,10 @@ class DiffusionBatcher:
 
         # 3. admit queued requests into freed slots: fresh prior draw at
         #    t = T under the request's own key — per-slot keys mean the
-        #    admission cannot perturb any in-flight trajectory
-        admit_pos, priors, noise_keys = [], [], []
+        #    admission cannot perturb any in-flight trajectory. The
+        #    request's condition payload (or the neutral one) is written
+        #    into the same rows (DESIGN.md §9).
+        admit_pos, priors, noise_keys, conds = [], [], [], []
         for i in range(self.n):
             if self._slot_req[i] is None and self.queue:
                 req = self.queue.popleft()
@@ -281,6 +337,8 @@ class DiffusionBatcher:
                 admit_pos.append(i)
                 priors.append(self.sde.prior_sample(k_prior, self.shape))
                 noise_keys.append(k_noise)
+                if self.conditioner is not None:
+                    conds.append(self._request_cond(req))
 
         # a retired-but-unrefilled slot needs no explicit marking: the
         # device loop already left it at t ≤ t_eps with done=True, which
@@ -294,6 +352,21 @@ class DiffusionBatcher:
 
         x_admit = jnp.stack(priors).astype(c.x.dtype) if admit_pos else None
         h0 = min(self.cfg.h_init, self.sde.T - self.sde.t_eps)
+        # condition leaves move with their samples (permute + row scatter
+        # like every other per-slot leaf — the DESIGN.md §9 compaction
+        # rule: payloads travel shard-locally, like keys)
+        cond_new = c.cond
+        if c.cond is not None:
+            if admit_pos:
+                cond_admit = jax.tree_util.tree_map(
+                    lambda *rows: jnp.stack(rows), conds[0], *conds[1:]
+                )
+                cond_new = jax.tree_util.tree_map(
+                    lambda leaf, av: update(leaf, admit_val=av.astype(leaf.dtype)),
+                    c.cond, cond_admit,
+                )
+            else:
+                cond_new = jax.tree_util.tree_map(update, c.cond)
         self._carry = self._shard_carry(SolverCarry(
             x=update(c.x, admit_val=x_admit),
             x_prev=update(c.x_prev, admit_val=x_admit),
@@ -309,11 +382,13 @@ class DiffusionBatcher:
             # it into the host total and reset so cfg.max_iters never
             # trips on a long-lived server
             iterations=jnp.asarray(0, jnp.int32),
+            cond=cond_new,
         ))
 
     def step(self) -> int:
-        """One sync horizon (≤ sync_horizon device iterations); returns
-        the number of busy slots entering the chunk."""
+        """One sync horizon (≤ sync_horizon device iterations,
+        DESIGN.md §7); returns the number of busy slots entering the
+        chunk."""
         self._sync()
         busy = sum(1 for r in self._slot_req if r is not None)
         if busy == 0:
@@ -324,6 +399,8 @@ class DiffusionBatcher:
         return busy
 
     def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, ImageRequest]:
+        """Drain the queue: step until every submitted request is
+        delivered (DESIGN.md §4/§7 serving loop)."""
         steps = 0
         while (self.queue or any(r is not None for r in self._slot_req)) \
                 and steps < max_steps:

@@ -1,0 +1,20 @@
+"""The docs-lint gate, run locally as part of tier 1 (DESIGN.md §9):
+every ``DESIGN.md §N`` citation in the code resolves to a real section
+header and README/DESIGN relative links point at existing files. CI
+runs the same checks as the dependency-free ``docs-lint`` job."""
+
+import pathlib
+import sys
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parent.parent / "tools")
+)
+import docs_lint  # noqa: E402
+
+
+def test_design_citations_resolve():
+    assert docs_lint.check_citations() == []
+
+
+def test_doc_relative_links_resolve():
+    assert docs_lint.check_links() == []

@@ -53,12 +53,14 @@ def _write_summary():
     lines = [
         "### Solver conformance (analytic OU marginal at t = t_eps)",
         "",
-        "| solver | sde | precision | mean err | std err | W2 | mean NFE | tol |",
-        "|---|---|---|---|---|---|---|---|",
+        "| solver | sde | precision | conditioner | mean err | std err "
+        "| W2 | mean NFE | tol |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in _ROWS:
         lines.append(
             f"| {r['solver']} | {r['sde']} | {r.get('precision', 'fp32')} "
+            f"| {r.get('conditioner', 'none')} "
             f"| {r['mean_err']:.4f} "
             f"| {r['std_err']:.4f} | {r['w2']:.4f} "
             f"| {r['mean_nfe']:.0f} | {r['tol']:.2f} |"
@@ -172,6 +174,46 @@ def test_adaptive_precision_conformance(preset, sde_name, sde):
     assert float(resbf.mean_nfe) <= 1.25 * float(res32.mean_nfe), (
         preset, float(resbf.mean_nfe), float(res32.mean_nfe),
     )
+
+
+@pytest.mark.parametrize("sde_name,sde", [("vp", VPSDE()),
+                                          ("ve", VESDE(sigma_max=10.0))])
+def test_inpaint_conditioner_conformance(sde_name, sde):
+    """The conditioning gate (DESIGN.md §9): an inpainting run on the
+    analytic OU SDE must keep the *free* region on the unconditional
+    marginal (independent coordinates ⇒ the conditional equals the
+    marginal) within the adaptive solver's W2 tolerance, with observed
+    coordinates pinned exactly at delivery and mean NFE ≤ 1.1× the
+    unconditional solve — post-accept projection must not provoke the
+    step controller into extra rejections."""
+    from repro.core import inpaint
+    from repro.core.analytic import gaussian_score as _gs
+
+    kw, tol = CASES["adaptive"]
+    res_u = _fp32_adaptive(sde_name, sde, kw)
+    observed = MU + S0 * jax.random.normal(
+        jax.random.PRNGKey(11), (BATCH, DIM))
+    mask = jnp.zeros((BATCH, DIM)).at[:, : DIM // 2].set(1.0)
+    conditioner, cond = inpaint(mask, observed)
+    res = _solve(sde, "adaptive", dict(kw, conditioner=conditioner,
+                                       cond=cond))
+    x = np.asarray(res.x)
+    np.testing.assert_array_equal(
+        x[:, : DIM // 2], np.asarray(observed)[:, : DIM // 2])
+    mu_a, s_a = analytic_marginal(sde)
+    free = x[:, DIM // 2:]
+    w2 = gaussian_w2(float(free.mean()), float(free.std()), mu_a, s_a)
+    nfe_ratio = float(res.mean_nfe) / float(res_u.mean_nfe)
+    _ROWS.append({
+        "solver": "adaptive", "sde": sde_name, "precision": "fp32",
+        "conditioner": "inpaint",
+        "mean_err": abs(float(free.mean()) - mu_a),
+        "std_err": abs(float(free.std()) - s_a), "w2": w2,
+        "mean_nfe": float(res.mean_nfe), "tol": tol,
+    })
+    assert not bool(jnp.any(jnp.isnan(res.x)))
+    assert w2 < tol, (sde_name, w2)
+    assert nfe_ratio <= 1.1, (sde_name, nfe_ratio)
 
 
 def test_adaptive_nfe_below_em_at_equal_error():

@@ -1,0 +1,95 @@
+"""docs-lint: keep code↔docs citations and doc links resolvable.
+
+Two checks (DESIGN.md §9 introduced the citation discipline this
+enforces; CI runs this as the fast ``docs-lint`` job):
+
+  1. every ``DESIGN.md §N`` citation in ``src/``, ``tests/``,
+     ``benchmarks/``, and ``examples/`` names a section that actually
+     exists as a ``## §N`` header in ``docs/DESIGN.md``;
+  2. every relative markdown link in ``README.md`` and
+     ``docs/DESIGN.md`` points at a file or directory that exists
+     (anchors and external http(s)/mailto links are skipped).
+
+Pure stdlib; exits non-zero with a per-finding report.
+
+  python tools/docs_lint.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "docs" / "DESIGN.md"
+CODE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+MD_FILES = ("README.md", "docs/DESIGN.md")
+
+SECTION_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+CITATION_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+# [text](target) — skip images' inner part handled the same way;
+# external schemes and pure anchors are filtered below
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def design_sections() -> set:
+    return set(SECTION_RE.findall(DESIGN.read_text(encoding="utf-8")))
+
+
+def check_citations() -> list:
+    """Every DESIGN.md §N cited from code resolves to a real section."""
+    sections = design_sections()
+    errors = []
+    for d in CODE_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            text = path.read_text(encoding="utf-8")
+            for lineno, line in enumerate(text.splitlines(), 1):
+                for n in CITATION_RE.findall(line):
+                    if n not in sections:
+                        errors.append(
+                            f"{path.relative_to(ROOT)}:{lineno}: cites "
+                            f"DESIGN.md §{n} but DESIGN.md has no '## §{n}' "
+                            f"header (have §{', §'.join(sorted(sections))})"
+                        )
+    return errors
+
+
+def check_links() -> list:
+    """Relative links in the doc layer point at existing paths."""
+    errors = []
+    for rel in MD_FILES:
+        path = ROOT / rel
+        text = path.read_text(encoding="utf-8")
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                    continue
+                if target.startswith("#"):  # in-page anchor
+                    continue
+                candidate = (path.parent / target.split("#", 1)[0]).resolve()
+                if not candidate.exists():
+                    try:
+                        shown = candidate.relative_to(ROOT)
+                    except ValueError:  # resolves outside the repo root
+                        shown = candidate
+                    errors.append(
+                        f"{rel}:{lineno}: link target '{target}' does not "
+                        f"exist (resolved {shown})"
+                    )
+    return errors
+
+
+def main() -> int:
+    errors = check_citations() + check_links()
+    for e in errors:
+        print(f"docs-lint: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-lint: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    print("docs-lint: all DESIGN.md §-citations and doc links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
