@@ -1,0 +1,127 @@
+"""Trajectory-diffusion planning benchmark (DESIGN.md §10).
+
+Two groups:
+
+  * **trajectory shapes** — the paper's headline economy on the third
+    workload: adaptive-solver NFE and wall-clock vs Euler–Maruyama on
+    analytic OU trajectory priors at several (horizon, transition)
+    shapes, with the *same* default tolerances as the image workload
+    (eps_rel = 0.05, sde-calibrated ε_abs — no per-workload tuning).
+    Gate: adaptive reaches EM-1000's error level (W2 vs the analytic
+    marginal, + MC floor) at strictly lower NFE — the same claim
+    ``tests/test_solver_conformance.py`` gates on the conformance and
+    trajectory rows.
+  * **planner-loop occupancy sweep** — the closed receding-horizon
+    loop (state-pinning conditioner aboard, DESIGN.md §10) through the
+    ``DiffusionBatcher`` at several envs-per-slot occupancies,
+    reporting plans/s, mean NFE, and the §7 waste accounting that slot
+    compaction keeps low while requests re-admit every control round.
+
+  PYTHONPATH=src python -m benchmarks.bench_planning [--batch 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import VPSDE, sample
+from repro.core.analytic import (
+    class_gaussian_noise_pred, gaussian_marginal_moments, gaussian_score,
+    gaussian_w2,
+)
+from repro.planning import OUEnv, PlannerConfig, RecedingHorizonPlanner
+
+MU, S0 = 0.3, 0.5
+EPS_REL = 0.05         # the image workload's default — no retuning
+EM_STEPS = 1000        # the paper's equal-error EM baseline
+TRAJ_SHAPES = [(16, 6), (32, 8)]
+RETURNS_BINS = 5
+
+
+def _solve(sde, score, shape, key, method, kw):
+    fn = jax.jit(lambda k: sample(sde, score, shape, k, method=method,
+                                  denoise=False, **kw))
+    res = fn(key)  # compile + warm
+    jax.block_until_ready(res.x)
+    t0 = time.perf_counter()
+    res = fn(key)
+    jax.block_until_ready(res.x)
+    return res, (time.perf_counter() - t0) * 1e6
+
+
+def bench_trajectory_shapes(batch: int) -> None:
+    sde = VPSDE()
+    score = gaussian_score(sde, MU, S0)
+    mu_a, s_a = gaussian_marginal_moments(sde, MU, S0)
+    key = jax.random.PRNGKey(0)
+    for H, D in TRAJ_SHAPES:
+        shape = (batch, H, D)
+        mc_floor = 3.0 * s_a / math.sqrt(batch * H * D)
+        res_em, us_em = _solve(sde, score, shape, key, "em",
+                               dict(n_steps=EM_STEPS))
+        res_ad, us_ad = _solve(sde, score, shape, key, "adaptive",
+                               dict(eps_rel=EPS_REL))
+        w2 = {}
+        for name, res in [("em", res_em), ("adaptive", res_ad)]:
+            x = res.x
+            w2[name] = gaussian_w2(float(x.mean()), float(x.std()),
+                                   mu_a, s_a)
+        equal_err = w2["adaptive"] <= w2["em"] + 2 * mc_floor + 0.02
+        fewer = float(res_ad.mean_nfe) < float(res_em.mean_nfe)
+        emit(
+            f"planning/traj_H{H}xD{D}/em{EM_STEPS}", us_em,
+            f"mean_nfe={float(res_em.mean_nfe):.0f};w2={w2['em']:.4f}",
+        )
+        emit(
+            f"planning/traj_H{H}xD{D}/adaptive", us_ad,
+            f"mean_nfe={float(res_ad.mean_nfe):.0f};"
+            f"w2={w2['adaptive']:.4f};"
+            f"nfe_ratio={float(res_ad.mean_nfe) / float(res_em.mean_nfe):.3f}x;"
+            f"gate_lower_nfe_at_equal_error="
+            f"{'pass' if equal_err and fewer else 'FAIL'}",
+        )
+
+
+def bench_planner_occupancy(slots: int = 8, steps: int = 2) -> None:
+    sde = VPSDE()
+    env = OUEnv(obs_dim=2)
+    pcfg = PlannerConfig(horizon=8, obs_dim=env.obs_dim,
+                         act_dim=env.act_dim, guidance_scale=1.5)
+    fwd = class_gaussian_noise_pred(
+        sde, MU + 0.5 * jax.numpy.linspace(-1.0, 1.0, RETURNS_BINS), S0, MU)
+    for n_envs in (slots, slots // 2, max(1, slots // 4)):
+        rh = RecedingHorizonPlanner(sde, fwd, None, pcfg, env,
+                                    slots=slots, sync_horizon=4)
+        t0 = time.perf_counter()
+        out = rh.rollout(jax.random.PRNGKey(1), n_envs=n_envs,
+                         n_steps=steps, returns_label=RETURNS_BINS - 1)
+        us = (time.perf_counter() - t0) * 1e6
+        n_plans = n_envs * steps
+        emit(
+            f"planning/loop_occ{n_envs / slots:.2f}", us / n_plans,
+            f"plans={n_plans};mean_nfe={float(out['nfe'].mean()):.0f};"
+            f"mean_reward={float(out['rewards'].mean()):.3f};"
+            f"wasted_nfe={out['wasted_nfe_fraction']:.3f};"
+            f"passenger_nfe={out['passenger_nfe_fraction']:.3f}",
+        )
+
+
+def main(argv=()) -> None:
+    # default () so benchmarks.run's own flags (--only ...) never leak
+    # into this parser; direct invocation passes sys.argv[1:] below
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=128)
+    args = ap.parse_args(argv)
+    bench_trajectory_shapes(args.batch)
+    bench_planner_occupancy()
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -15,6 +15,7 @@ from . import (
     bench_dimensionality,
     bench_guidance,
     bench_kernels,
+    bench_planning,
     bench_precision,
     bench_serving,
     bench_sharded_sampling,
@@ -36,6 +37,7 @@ SUITES = {
     "compaction": bench_compaction.main,   # slot compaction vs monolithic
     "precision": bench_precision.main,     # fp32/bf16/bf16_full policies
     "guidance": bench_guidance.main,       # conditioning NFE overhead
+    "planning": bench_planning.main,       # trajectory workload + planner loop
 }
 
 

@@ -3,6 +3,17 @@
 No orbax offline; this covers the framework need (save/restore params,
 optimizer state, EMA, step) with atomic writes and structure validation
 on restore.
+
+Extension dtypes (DESIGN.md §8): numpy's npz format only serializes its
+builtin dtypes — an ml_dtypes leaf (bfloat16 param trees under the
+``bf16_full`` precision preset) would silently degrade to a raw void
+array and fail to restore. Such leaves are stored as same-width
+unsigned-int views with the true dtype names recorded *inside the npz*
+(the ``__encoded_dtypes__`` entry — the marker is load-bearing, so it
+travels with the arrays rather than in a separable sidecar; the json
+metadata carries a human-readable copy), and viewed back on restore —
+bit-exact round trips for every param dtype
+(``tests/test_checkpoint_roundtrip.py``).
 """
 
 from __future__ import annotations
@@ -24,16 +35,44 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+#: same-width unsigned view used to serialize extension dtypes
+_UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+#: in-npz entry carrying {key: dtype name} for encoded leaves
+_ENCODED_KEY = "__encoded_dtypes__"
+
+
+def _encode(flat: Dict[str, np.ndarray]):
+    """npz-safe (arrays, encoded_dtypes): extension-dtype leaves (numpy
+    kind 'V' — ml_dtypes bfloat16 etc.) become same-width uint views,
+    with the true dtype name recorded per key."""
+    out, encoded = {}, {}
+    for key, arr in flat.items():
+        if arr.dtype.kind == "V":
+            out[key] = arr.view(_UINT_FOR_SIZE[arr.dtype.itemsize])
+            encoded[key] = arr.dtype.name
+        else:
+            out[key] = arr
+    return out, encoded
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     metadata: Optional[dict] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    flat = _flatten(tree)
+    flat, encoded = _encode(_flatten(tree))
+    if encoded:
+        # the decode marker rides inside the archive: a checkpoint
+        # copied without its json sidecar must still restore bit-exactly
+        # rather than silently value-cast raw uint patterns
+        flat[_ENCODED_KEY] = np.asarray(json.dumps(encoded))
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
         np.savez(f, **flat)
     os.replace(tmp, path)
     meta = {"step": step, **(metadata or {})}
+    if encoded:
+        meta["encoded_dtypes"] = encoded
     with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
         json.dump(meta, f)
     return path
@@ -59,9 +98,12 @@ def restore_checkpoint(directory: str, like: Any,
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     data = np.load(path)
+    encoded = {}
+    if _ENCODED_KEY in data.files:
+        encoded = json.loads(str(data[_ENCODED_KEY]))
     flat_like = _flatten(like)
     missing = set(flat_like) - set(data.files)
-    extra = set(data.files) - set(flat_like)
+    extra = set(data.files) - set(flat_like) - {_ENCODED_KEY}
     if missing or extra:
         raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
     leaves_paths = jax.tree_util.tree_flatten_with_path(like)
@@ -69,6 +111,10 @@ def restore_checkpoint(directory: str, like: Any,
     for path_k, leaf in leaves_paths[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
         arr = data[key]
+        if key in encoded:
+            # view the uint payload back as its true extension dtype —
+            # bit-exact, no rounding through an intermediate float
+            arr = arr.view(np.dtype(encoded[key]))
         if arr.shape != leaf.shape:
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         restored.append(jax.numpy.asarray(arr, leaf.dtype))

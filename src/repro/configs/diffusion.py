@@ -4,11 +4,13 @@
 scale; ``highres_dit`` stands in for the LSUN/FFHQ 256×256 setting (used
 by the table-2 benchmark at reduced resolution on CPU, full resolution
 under the dry-run). ``toy_mlp`` is the exactly-solvable 2-D setting used
-for solver validation.
+for solver validation. ``traj_unet`` is the trajectory workload's
+temporal score network (DESIGN.md §10) at a locomotion-style shape.
 """
 
 from repro.models.dit import DiTConfig
 from repro.models.score_unet import MLPScoreConfig, UNetConfig
+from repro.models.temporal_unet import TemporalUNetConfig
 
 # Paper Table 1 analog (CIFAR-scale, 32×32×3)
 CIFAR_DIT = DiTConfig(
@@ -30,3 +32,11 @@ DIT_100M = DiTConfig(
 )
 
 TOY_MLP = MLPScoreConfig(dim=2, hidden=128, depth=3)
+
+# Trajectory-diffusion planning workload (DESIGN.md §10): horizon-32
+# plans over a locomotion-style transition (obs 17 + act 6 = 23), with
+# returns-to-go CFG bins (decision-diffuser setting)
+TRAJ_UNET = TemporalUNetConfig(
+    horizon=32, transition_dim=23, base=32, mults=(1, 2, 4), t_dim=64,
+    returns_bins=10,
+)

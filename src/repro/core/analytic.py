@@ -87,3 +87,19 @@ def gaussian_noise_pred(sde: SDE, mu: float = 0.3, s0: float = 0.5):
         return -score(x, t) * std.reshape((-1,) + (1,) * (x.ndim - 1))
 
     return forward_fn
+
+
+def class_gaussian_noise_pred(sde: SDE, mus, s0: float = 0.5,
+                              null_mu: float = 0.3):
+    """Label-aware :func:`class_gaussian_score` in ``make_sample_step``'s
+    noise-prediction ``forward_fn(params, x, t, y=None)`` convention —
+    the analytic stand-in for a returns-conditioned score net in the
+    planner's serving loop (DESIGN.md §10). The null branch computes
+    exactly ``gaussian_noise_pred(sde, null_mu, s0)``'s arithmetic."""
+    score = class_gaussian_score(sde, mus, s0, null_mu)
+
+    def forward_fn(params, x: Array, t: Array, y: Array | None = None) -> Array:
+        _, std = sde.marginal(t)
+        return -score(x, t, y) * std.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    return forward_fn

@@ -1,4 +1,5 @@
-"""Serving launchers: batched LM decode, and mesh-sharded diffusion.
+"""Serving launchers: batched LM decode, mesh-sharded diffusion, and
+receding-horizon planning.
 
 LM mode prefills a batch of prompts through ``forward`` (building the KV
 caches by replaying tokens through ``serve_step`` — exact,
@@ -11,11 +12,18 @@ same ``serve_step``.
 placeholder devices so the per-device slot-refill path is exercised on a
 CPU-only host exactly as it would run on a real data-parallel mesh.
 
+``--plan`` runs the receding-horizon trajectory planner as a service
+(DESIGN.md §10): closed-loop plan requests (state pinned via
+horizon-axis inpainting, optional ``--cfg-scale`` returns guidance)
+draining through the same ``DiffusionBatcher`` —
+``repro.launch.plan`` is the underlying launcher.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --batch 4 --prompt-len 32 --gen-len 32
   PYTHONPATH=src python -m repro.launch.serve --diffusion --fake-devices 4 \
       --slots 8 --requests 32
+  PYTHONPATH=src python -m repro.launch.serve --plan --envs 6 --plan-steps 4
 """
 
 from __future__ import annotations
@@ -187,6 +195,20 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--diffusion", action="store_true",
                     help="run the mesh-sharded diffusion server instead")
+    ap.add_argument("--plan", action="store_true",
+                    help="run the receding-horizon planner service "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--plan-env", default="ou", choices=["ou", "pointmass"],
+                    help="analytic environment for --plan")
+    ap.add_argument("--envs", type=int, default=6,
+                    help="closed-loop environments for --plan")
+    ap.add_argument("--plan-steps", type=int, default=4,
+                    help="control rounds per environment for --plan")
+    ap.add_argument("--plan-horizon", type=int, default=8,
+                    help="plan horizon H for --plan")
+    ap.add_argument("--unet", action="store_true",
+                    help="--plan with a train-free temporal UNet score "
+                         "instead of the analytic one")
     ap.add_argument("--fake-devices", type=int, default=None,
                     help="force N placeholder host devices (set pre-init)")
     ap.add_argument("--slots", type=int, default=8)
@@ -206,6 +228,17 @@ def main() -> None:
                          "scale (diffusion mode, DESIGN.md §9)")
     args = ap.parse_args()
 
+    if args.plan:
+        from repro.launch.plan import serve_planning
+
+        serve_planning(env_name=args.plan_env, envs=args.envs,
+                       steps=args.plan_steps, slots=args.slots,
+                       sync_horizon=args.sync_horizon,
+                       compaction=not args.no_compaction,
+                       horizon=args.plan_horizon,
+                       cfg_scale=args.cfg_scale or 0.0,
+                       precision=args.precision, unet=args.unet)
+        return
     if args.diffusion:
         serve_diffusion(slots=args.slots, requests=args.requests,
                         sync_horizon=args.sync_horizon,

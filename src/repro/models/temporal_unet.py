@@ -1,0 +1,235 @@
+"""Temporal score network for trajectory diffusion (DESIGN.md §10).
+
+A 1-D residual conv UNet over ``(B, H, D)`` trajectories — horizon H of
+transitions, each a concatenated ``[observation, action]`` vector of
+width D — in the decision-diffuser / Diffuser family: time conditioning
+through every residual block, down/up path over the *horizon* axis with
+skip connections, GroupNorm + SiLU, noise-prediction output. This is
+the third score-network workload of the repo (images: ``score_unet`` /
+``dit``; token sequences: ``diffusion_lm``) and exists to exercise the
+paper's claim that the adaptive solver needs no step-size tuning across
+data modalities and dimensionalities: every registered solver consumes
+the ``make_score_fn`` adapter below unmodified.
+
+Returns conditioning (DESIGN.md §10): ``returns_bins > 0`` adds a
+discretized returns-to-go embedding table with one trailing null row —
+the classifier-free training layout — so the net's score is label-aware
+``s(x, t, y)`` and a ``ClassifierFree`` conditioner (DESIGN.md §9)
+drives it directly. The null row is **zero-initialized**, which makes
+the null-labeled forward bit-identical to the unconditional forward
+(``y=None``) — the guardrail ``tests/test_planning.py`` asserts.
+
+Precision (DESIGN.md §8): both the forward and the adapter accept
+``policy=``. The timestep-embedding MLP and the returns embedding
+compute in fp32 from the stored weights, GroupNorm upcasts internally,
+and ``make_score_fn`` does the 1/std rescale in fp32 — the same seams
+as the image nets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, timestep_embedding
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalUNetConfig:
+    """1-D UNet over (horizon, transition) trajectories.
+
+    ``horizon`` must be divisible by ``2 ** (len(mults) - 1)`` (one
+    stride-2 downsample per extra resolution level).
+    """
+
+    horizon: int = 16
+    #: transition width D = obs_dim + act_dim
+    transition_dim: int = 6
+    base: int = 32            # base feature width
+    mults: tuple = (1, 2)     # per-resolution channel multipliers
+    t_dim: int = 64
+    groups: int = 8
+    kernel: int = 5           # conv kernel along the horizon axis
+    #: > 0 → returns-conditioned score (DESIGN.md §10): a discretized
+    #: returns-to-go embedding table with one trailing zero-init null
+    #: row; 0 (the default) leaves params and forward identical to the
+    #: unconditional net.
+    returns_bins: int = 0
+
+    def __post_init__(self):
+        down = 2 ** (len(self.mults) - 1)
+        if self.horizon % down:
+            raise ValueError(
+                f"horizon {self.horizon} must divide {down} "
+                f"(one stride-2 downsample per extra mult)"
+            )
+
+
+def _conv_init(key, k, cin, cout, dtype=jnp.float32):
+    fan = k * cin
+    return (jax.random.truncated_normal(key, -2, 2, (k, cin, cout), jnp.float32)
+            * fan ** -0.5).astype(dtype)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride,), "SAME", dimension_numbers=("NHC", "HIO", "NHC")
+    )
+
+
+def _groupnorm(x: Array, scale: Array, bias: Array, groups: int) -> Array:
+    B, H, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (xg.reshape(B, H, C) * scale + bias).astype(x.dtype)
+
+
+def _init_resblock(key, k, cin, cout, t_dim):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "gn1_s": jnp.ones((cin,)), "gn1_b": jnp.zeros((cin,)),
+        "conv1": _conv_init(k1, k, cin, cout),
+        "temb_w": dense_init(k2, (t_dim, cout), jnp.float32),
+        "temb_b": jnp.zeros((cout,)),
+        "gn2_s": jnp.ones((cout,)), "gn2_b": jnp.zeros((cout,)),
+        "conv2": jnp.zeros((k, cout, cout)),  # zero-init second conv
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(k3, 1, cin, cout)
+    return p
+
+
+def _resblock(p, x, temb, groups):
+    h = jax.nn.silu(_groupnorm(x, p["gn1_s"], p["gn1_b"], groups))
+    h = _conv(h, p["conv1"])
+    h = h + (jax.nn.silu(temb) @ p["temb_w"] + p["temb_b"])[:, None, :]
+    h = jax.nn.silu(_groupnorm(h, p["gn2_s"], p["gn2_b"], groups))
+    h = _conv(h, p["conv2"])
+    skip = _conv(x, p["skip"]) if "skip" in p else x
+    return skip + h
+
+
+def init_temporal_unet(cfg: TemporalUNetConfig, key: Array) -> Dict[str, Any]:
+    ks = iter(jax.random.split(key, 64))
+    widths = [cfg.base * m for m in cfg.mults]
+    p: Dict[str, Any] = {
+        "t_w1": dense_init(next(ks), (cfg.t_dim, cfg.t_dim), jnp.float32),
+        "t_w2": dense_init(next(ks), (cfg.t_dim, cfg.t_dim), jnp.float32),
+        "conv_in": _conv_init(next(ks), cfg.kernel, cfg.transition_dim,
+                              widths[0]),
+    }
+    if cfg.returns_bins > 0:
+        # one embedding row per returns bin + a trailing null row; the
+        # null row is zero-init so a null-labeled forward is
+        # bit-identical to the unconditional (y=None) forward
+        table = 0.02 * jax.random.normal(
+            next(ks), (cfg.returns_bins + 1, cfg.t_dim), jnp.float32)
+        p["ret_emb"] = table.at[cfg.returns_bins].set(0.0)
+    cin = widths[0]
+    downs = []
+    for i, w in enumerate(widths):
+        downs.append({
+            "res": _init_resblock(next(ks), cfg.kernel, cin, w, cfg.t_dim),
+            # every level but the last halves the horizon
+            **({"down": _conv_init(next(ks), cfg.kernel, w, w)}
+               if i < len(widths) - 1 else {}),
+        })
+        cin = w
+    p["downs"] = downs
+    p["mid1"] = _init_resblock(next(ks), cfg.kernel, cin, cin, cfg.t_dim)
+    p["mid2"] = _init_resblock(next(ks), cfg.kernel, cin, cin, cfg.t_dim)
+    ups = []
+    for i, w in enumerate(reversed(widths)):
+        ups.append({
+            **({"up": _conv_init(next(ks), cfg.kernel, cin, w)} if i else {}),
+            # i == 0 runs at the bottom resolution (no upsample/concat);
+            # later levels see [upsampled w ; skip w] = 2w channels
+            "res": _init_resblock(next(ks), cfg.kernel, 2 * w if i else cin,
+                                  w, cfg.t_dim),
+        })
+        cin = w
+    p["ups"] = ups
+    p["gn_out_s"] = jnp.ones((cin,))
+    p["gn_out_b"] = jnp.zeros((cin,))
+    p["conv_out"] = jnp.zeros((cfg.kernel, cin, cfg.transition_dim))
+    return p
+
+
+def temporal_unet_forward(params, x: Array, t: Array,
+                          cfg: TemporalUNetConfig, policy=None,
+                          y: Array | None = None) -> Array:
+    """x (B, H, D), t (B,) → same-shape noise prediction.
+
+    ``y`` (DESIGN.md §10): optional int32 (B,) returns-bin labels for a
+    returns-conditioned net (``cfg.returns_bins > 0``); negative labels
+    select the trailing null row. Like the timestep embedding, the
+    returns embedding joins the conditioning path in fp32 from the
+    stored weights — and the null row is zero, so the null branch is
+    bit-identical to ``y=None``.
+    """
+    # fp32 timestep-embedding math from the stored (master) weights
+    f32 = lambda w: w.astype(jnp.float32)
+    temb = timestep_embedding(t, cfg.t_dim)
+    temb = jax.nn.silu(temb @ f32(params["t_w1"])) @ f32(params["t_w2"])
+    if y is not None and cfg.returns_bins > 0:
+        idx = jnp.where(y < 0, cfg.returns_bins, y).astype(jnp.int32)
+        temb = temb + f32(params["ret_emb"])[idx]
+
+    if policy is not None:
+        x = x.astype(policy.compute)
+        params = policy.params_for_compute(params)
+        temb = temb.astype(policy.compute)
+
+    h = _conv(x, params["conv_in"])
+    skips = []
+    for d in params["downs"]:
+        h = _resblock(d["res"], h, temb, cfg.groups)
+        if "down" in d:
+            skips.append(h)
+            h = _conv(h, d["down"], stride=2)
+    h = _resblock(params["mid1"], h, temb, cfg.groups)
+    h = _resblock(params["mid2"], h, temb, cfg.groups)
+    for u in params["ups"]:
+        if "up" in u:
+            B, H, C = h.shape
+            h = jax.image.resize(h, (B, H * 2, C), "nearest")
+            h = _conv(h, u["up"])
+            h = jnp.concatenate([h, skips.pop()], axis=-1)
+        h = _resblock(u["res"], h, temb, cfg.groups)
+    h = jax.nn.silu(_groupnorm(h, params["gn_out_s"], params["gn_out_b"],
+                               cfg.groups))
+    return _conv(h, params["conv_out"])
+
+
+def make_score_fn(params, cfg: TemporalUNetConfig, sde, policy=None):
+    """Noise-prediction net → score: s(x,t[,y]) = −net(x,t[,y])/std(t)
+    (DESIGN.md §10) — the adapter that makes every registered solver
+    work on trajectories unmodified: the returned field has the plain
+    ``s(x, t)`` signature (``y`` optional, consumed by a
+    ``ClassifierFree``/``PlanConditioner`` wrap per DESIGN.md §9).
+
+    With ``policy`` (DESIGN.md §8): weights stored at ``param_dtype``,
+    x cast to the compute dtype on entry, fp32 1/std rescale, score
+    returned in ``state_dtype`` — the same contract as the image nets.
+    """
+    if policy is not None:
+        params = policy.cast_params(params)
+
+    def score(x: Array, t: Array, y: Array | None = None) -> Array:
+        _, std = sde.marginal(t)
+        xin = x if policy is None else policy.to_compute(x)
+        out = temporal_unet_forward(params, xin, t, cfg, policy=policy, y=y)
+        s = -out.astype(jnp.float32) / std.reshape(
+            (-1,) + (1,) * (x.ndim - 1)
+        )
+        return s if policy is None else policy.to_state(s)
+
+    return score

@@ -1,0 +1,29 @@
+"""Trajectory-diffusion planning subsystem (DESIGN.md §10).
+
+Temporal score networks over ``(B, H, D)`` trajectories
+(``repro.models.temporal_unet``), returns/state-conditioned plan
+generation built on the §9 conditioning seam, analytic environments,
+and the receding-horizon closed loop served through the §7
+``DiffusionBatcher``.
+"""
+
+from repro.planning.envs import ENVS, OUEnv, PointMassEnv, get_env
+from repro.planning.planner import (
+    NULL_RETURN,
+    PlanConditioner,
+    PlannerConfig,
+    PlanRequest,
+    RecedingHorizonPlanner,
+    first_action,
+    plan,
+    plan_conditioner,
+    returns_to_bin,
+    state_pin,
+)
+
+__all__ = [
+    "ENVS", "OUEnv", "PointMassEnv", "get_env",
+    "NULL_RETURN", "PlanConditioner", "PlannerConfig", "PlanRequest",
+    "RecedingHorizonPlanner", "first_action", "plan", "plan_conditioner",
+    "returns_to_bin", "state_pin",
+]

@@ -1,0 +1,103 @@
+"""Analytic environments for the receding-horizon planner (DESIGN.md §10).
+
+No external simulator dependencies: both environments are a few lines
+of jnp with closed-form dynamics, which is what lets the planner's
+closed loop run inside tier-1 tests and CPU-only benchmarks. Both are
+pure-functional: ``reset(key) -> obs`` and ``step(obs, action, key) ->
+(obs, reward)``; state *is* the observation.
+
+  * :class:`OUEnv` — controlled Ornstein–Uhlenbeck process: the action
+    adds to the mean-reverting drift, noise is Brownian. Its stationary
+    distribution is the Gaussian the analytic trajectory prior
+    (``repro.core.analytic.gaussian_score``) models, so the planner's
+    plans are draws from the right family even without a trained net.
+  * :class:`PointMassEnv` — deterministic 2-D double integrator
+    (position/velocity state, acceleration action) steering to a goal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OUEnv:
+    """Controlled OU process: ds = (−θ·s + a)·dt + σ·√dt·z.
+
+    Reward is the negative quadratic state/action cost — the planner
+    should hold the state near 0 with small actions.
+    """
+
+    obs_dim: int = 2
+    theta: float = 1.0
+    sigma: float = 0.2
+    dt: float = 0.1
+    act_cost: float = 0.1
+
+    @property
+    def act_dim(self) -> int:
+        return self.obs_dim  # one actuator per state coordinate
+
+    def reset(self, key: Array) -> Array:
+        return self.sigma * jax.random.normal(key, (self.obs_dim,))
+
+    def step(self, obs: Array, action: Array, key: Array):
+        z = jax.random.normal(key, (self.obs_dim,))
+        nxt = (obs + self.dt * (-self.theta * obs + action)
+               + self.sigma * jnp.sqrt(self.dt) * z)
+        reward = -(jnp.sum(nxt * nxt)
+                   + self.act_cost * jnp.sum(action * action))
+        return nxt, float(reward)
+
+
+@dataclasses.dataclass(frozen=True)
+class PointMassEnv:
+    """Deterministic double integrator: obs = [pos, vel], action = accel.
+
+    Reward is the negative squared distance to ``goal`` (plus a small
+    velocity penalty so the optimum is to park there).
+    """
+
+    dim: int = 2
+    dt: float = 0.1
+    #: None → the origin in ``dim`` dimensions
+    goal: tuple = None
+    vel_cost: float = 0.05
+
+    @property
+    def obs_dim(self) -> int:
+        return 2 * self.dim
+
+    @property
+    def act_dim(self) -> int:
+        return self.dim
+
+    def reset(self, key: Array) -> Array:
+        pos = jax.random.normal(key, (self.dim,))
+        return jnp.concatenate([pos, jnp.zeros((self.dim,))])
+
+    def step(self, obs: Array, action: Array, key: Array = None):
+        del key  # deterministic
+        pos, vel = obs[: self.dim], obs[self.dim:]
+        pos = pos + self.dt * vel
+        vel = vel + self.dt * action
+        goal = (jnp.zeros((self.dim,)) if self.goal is None
+                else jnp.asarray(self.goal))
+        err = pos - goal
+        reward = -(jnp.sum(err * err) + self.vel_cost * jnp.sum(vel * vel))
+        return jnp.concatenate([pos, vel]), float(reward)
+
+
+ENVS = {"ou": OUEnv, "pointmass": PointMassEnv}
+
+
+def get_env(name: str, **kw):
+    name = name.lower()
+    if name not in ENVS:
+        raise ValueError(f"unknown env {name!r}; have {sorted(ENVS)}")
+    return ENVS[name](**kw)

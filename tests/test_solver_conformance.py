@@ -216,6 +216,50 @@ def test_inpaint_conditioner_conformance(sde_name, sde):
     assert nfe_ratio <= 1.1, (sde_name, nfe_ratio)
 
 
+#: trajectory workload shape (horizon, transition) — DESIGN.md §10
+TRAJ_H, TRAJ_D = 16, 6
+
+
+@pytest.mark.parametrize("sde_name,sde", [("vp", VPSDE()),
+                                          ("ve", VESDE(sigma_max=10.0))])
+def test_trajectory_workload_conformance(sde_name, sde):
+    """The tuning-free-across-modalities gate (DESIGN.md §10): on the
+    analytic OU *trajectory* prior — (B, H, D) decision-diffuser
+    shapes — the adaptive solver passes the same W2 gate at the same
+    default tolerances as the image workload (no per-workload tuning),
+    at strictly lower NFE than Euler–Maruyama at equal error."""
+    kw, tol = CASES["adaptive"]
+    shape = (BATCH, TRAJ_H, TRAJ_D)
+    score = gaussian_score(sde, MU, S0)
+
+    def solve(method, skw):
+        return jax.jit(
+            lambda k: sample(sde, score, shape, k, method=method,
+                             denoise=False, **skw)
+        )(jax.random.PRNGKey(0))
+
+    res_ad = solve("adaptive", kw)
+    res_em = solve("em", dict(n_steps=1000))
+    mu_a, s_a = analytic_marginal(sde)
+    mu, s = _moments(res_ad.x)
+    mu_e, s_e = _moments(res_em.x)
+    w2_ad = gaussian_w2(mu, s, mu_a, s_a)
+    w2_em = gaussian_w2(mu_e, s_e, mu_a, s_a)
+    mc_floor = 3.0 * s_a / math.sqrt(BATCH * TRAJ_H * TRAJ_D)
+    _ROWS.append({
+        "solver": "adaptive", "sde": f"{sde_name}:traj{TRAJ_H}x{TRAJ_D}",
+        "precision": "fp32",
+        "mean_err": abs(mu - mu_a), "std_err": abs(s - s_a), "w2": w2_ad,
+        "mean_nfe": float(res_ad.mean_nfe), "tol": tol,
+    })
+    assert not bool(jnp.any(jnp.isnan(res_ad.x)))
+    # the image workload's gate, with the image workload's tolerances
+    assert w2_ad < tol, (sde_name, w2_ad)
+    # equal error (up to the MC floor) at strictly lower NFE
+    assert w2_ad <= w2_em + 2 * mc_floor + 0.02, (w2_ad, w2_em)
+    assert float(res_ad.mean_nfe) < float(res_em.mean_nfe)
+
+
 def test_adaptive_nfe_below_em_at_equal_error():
     """Paper headline as a regression gate: at EM-1000's error level the
     adaptive solver spends a fraction of the NFE."""
