@@ -1,0 +1,106 @@
+"""Race the whole solver zoo and write the auto-selection report.
+
+Every registered solver runs its ``repro.analysis.solver_select.ZOO``
+configuration on the four conformance workloads — {vp, ve} × {OU
+vector, traj16x6 trajectory} — against the analytic Gaussian score, and
+the per-workload ranking (best NFE at the W2 gate, DESIGN.md §11) is
+written to ``experiments/conformance/selection.{md,json}`` exactly as
+the conformance suite writes it, plus wall-clock timings the test suite
+does not measure. CI's slow job publishes the report as a step summary
+so a solver regression surfaces as a ranking diff.
+
+  PYTHONPATH=src python -m benchmarks.bench_solver_zoo [--batch 512]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.analysis.solver_select import ZOO, select, write_selection
+from repro.core import VESDE, VPSDE, available_solvers, sample
+from repro.core.analytic import (
+    gaussian_marginal_moments, gaussian_score, gaussian_w2,
+)
+
+MU, S0 = 0.3, 0.5
+TRAJ_H, TRAJ_D = 16, 6  # the conformance suite's trajectory workload
+
+
+def _workloads(batch):
+    return [
+        ("vp", VPSDE(), (batch, 8)),
+        ("ve", VESDE(sigma_max=10.0), (batch, 8)),
+        (f"vp:traj{TRAJ_H}x{TRAJ_D}", VPSDE(), (batch, TRAJ_H, TRAJ_D)),
+        (f"ve:traj{TRAJ_H}x{TRAJ_D}", VESDE(sigma_max=10.0),
+         (batch, TRAJ_H, TRAJ_D)),
+    ]
+
+
+def main(argv=()) -> None:
+    # default () so benchmarks.run's own flags (--only ...) never leak
+    # into this parser; direct invocation passes sys.argv[1:] below
+    ap = argparse.ArgumentParser()
+    # batch matches the conformance suite's 512: the gates were calibrated
+    # at that Monte-Carlo floor, and smaller batches can flip a marginal
+    # pass (momentum on vp sits ~0.05 of the 0.08 gate at 512)
+    ap.add_argument("--batch", type=int, default=512)
+    args = ap.parse_args(argv)
+
+    missing = set(available_solvers()) - set(ZOO)
+    if missing:
+        raise SystemExit(f"solvers missing a ZOO entry: {sorted(missing)}")
+
+    rows = []
+    for workload, sde, shape in _workloads(args.batch):
+        score = gaussian_score(sde, MU, S0)
+        mu_a, s_a = gaussian_marginal_moments(sde, MU, S0)
+        for name, spec in ZOO.items():
+            if spec.get("vp_only") and not workload.startswith("vp"):
+                continue
+            fn = jax.jit(
+                lambda k, n=name, s=sde, sc=score, sh=shape: sample(
+                    s, sc, sh, k, method=n, denoise=False,
+                    **ZOO[n]["kwargs"],
+                )
+            )
+            res = fn(jax.random.PRNGKey(0))  # compile + warm
+            jax.block_until_ready(res.x)
+            t0 = time.perf_counter()
+            res = fn(jax.random.PRNGKey(0))
+            jax.block_until_ready(res.x)
+            us = (time.perf_counter() - t0) * 1e6
+            mu, s = float(res.x.mean()), float(res.x.std())
+            w2 = gaussian_w2(mu, s, mu_a, s_a)
+            nfe = float(res.mean_nfe)
+            rows.append({
+                "solver": name, "sde": workload, "precision": "fp32",
+                "mean_err": abs(mu - mu_a), "std_err": abs(s - s_a),
+                "w2": w2, "mean_nfe": nfe, "tol": spec["tol"],
+            })
+            gate = "pass" if w2 < spec["tol"] else "FAIL"
+            emit(
+                f"solver_zoo/{workload}/{name}", us,
+                f"w2={w2:.4f};mean_nfe={nfe:.0f};gate_{spec['tol']}={gate}",
+            )
+
+    report = select(rows)
+    md_path, _ = write_selection(report)
+    for workload, data in report.items():
+        wn, an = data["winner_nfe"], data["adaptive_nfe"]
+        ratio = f"{wn / an:.2f}" if (wn and an) else "nan"
+        emit(
+            f"solver_zoo/select/{workload}", 0.0,
+            f"winner={data['winner']};winner_nfe={wn:.0f};"
+            f"nfe_vs_adaptive={ratio}x",
+        )
+    print(f"# selection report: {md_path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

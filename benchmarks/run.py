@@ -19,6 +19,7 @@ from . import (
     bench_precision,
     bench_serving,
     bench_sharded_sampling,
+    bench_solver_zoo,
     table1_solver_grid,
     table2_highdim,
     table3_offtheshelf,
@@ -38,6 +39,7 @@ SUITES = {
     "precision": bench_precision.main,     # fp32/bf16/bf16_full policies
     "guidance": bench_guidance.main,       # conditioning NFE overhead
     "planning": bench_planning.main,       # trajectory workload + planner loop
+    "solver_zoo": bench_solver_zoo.main,   # zoo race + auto-selection report
 }
 
 

@@ -1,0 +1,148 @@
+"""Per-workload solver auto-selection: best NFE at a fixed W2 gate.
+
+The solver zoo's capstone (DESIGN.md §11): given conformance rows —
+one per (solver, workload) from the analytic suite or the zoo
+benchmark — pick, per workload, the cheapest solver (lowest mean NFE)
+among those that pass their W2 gate. The report is written to
+``experiments/conformance/selection.{md,json}`` and published as a CI
+step summary, so a solver regression surfaces as a *ranking diff*, not
+a silent gate pass.
+
+``ZOO`` is the single spec of the raced configurations: registered
+solver name → conformance kwargs + W2 gate. It is shared by
+``tests/test_solver_conformance.py`` (which derives its case table from
+it, so registry completeness stays a structural property) and
+``benchmarks/bench_solver_zoo.py`` (which races the zoo end to end with
+wall-clock timings).
+
+Gates are per-solver, not global: PC-family samplers are
+variance-biased on coarse grids (the paper calls PC "only heuristically
+motivated") and carry a loose 0.25 gate; passing a loose gate does not
+hand them the win unless they also spend the fewest NFE.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+#: registered solver → {kwargs, tol[, vp_only]}. Tolerances mirror the
+#: conformance suite's history: 0.08 for solvers expected at EM-200
+#: error, 0.10 for DDIM-50, 0.25 for the PC family.
+ZOO = {
+    "em": dict(kwargs=dict(n_steps=200), tol=0.08),
+    "adaptive": dict(kwargs=dict(eps_rel=0.05), tol=0.08),
+    "momentum": dict(kwargs=dict(eps_rel=0.05), tol=0.08),
+    "heun": dict(kwargs=dict(eps_rel=0.05), tol=0.08),
+    "ode": dict(kwargs={}, tol=0.08),
+    "pc": dict(kwargs=dict(n_steps=100), tol=0.25),
+    "pc_hmc": dict(kwargs=dict(n_steps=100), tol=0.25),
+    "ddim": dict(kwargs=dict(n_steps=50), tol=0.10, vp_only=True),
+}
+
+
+def zoo_cases() -> dict:
+    """(kwargs, tol) per solver — the conformance suite's case table."""
+    return {name: (dict(spec["kwargs"]), spec["tol"])
+            for name, spec in ZOO.items()}
+
+
+def select(rows) -> dict:
+    """Per-workload ranking + winner from conformance rows.
+
+    ``rows`` are summary rows (dicts with at least solver / sde / w2 /
+    mean_nfe / tol). Only fp32, unconditioned rows of zoo solvers are
+    ranked — precision presets and conditioner overheads are gated by
+    their own suites, not raced here. The workload key is the row's
+    ``sde`` column (``vp``, ``ve``, ``vp:traj16x6``, ...).
+
+    Returns {workload: {ranking, winner, winner_nfe, adaptive_nfe}} with
+    the ranking sorted by mean NFE ascending and the winner the cheapest
+    entry that passes its gate.
+    """
+    by_workload: dict = {}
+    for r in rows:
+        if r.get("solver") not in ZOO:
+            continue
+        if r.get("precision", "fp32") != "fp32":
+            continue
+        if r.get("conditioner", "none") not in (None, "none"):
+            continue
+        by_workload.setdefault(r["sde"], []).append(r)
+
+    report = {}
+    for workload, wrows in sorted(by_workload.items()):
+        ranking = [
+            {
+                "solver": r["solver"],
+                "w2": float(r["w2"]),
+                "tol": float(r["tol"]),
+                "mean_nfe": float(r["mean_nfe"]),
+                "passes": float(r["w2"]) < float(r["tol"]),
+            }
+            for r in sorted(wrows, key=lambda r: float(r["mean_nfe"]))
+        ]
+        winner = next((e for e in ranking if e["passes"]), None)
+        adaptive_entry = next(
+            (e for e in ranking if e["solver"] == "adaptive"), None)
+        report[workload] = {
+            "ranking": ranking,
+            "winner": winner["solver"] if winner else None,
+            "winner_nfe": winner["mean_nfe"] if winner else None,
+            "adaptive_nfe": (
+                adaptive_entry["mean_nfe"] if adaptive_entry else None),
+        }
+    return report
+
+
+def render_markdown(report: dict) -> str:
+    """The selection report as the CI-step-summary markdown."""
+    lines = [
+        "### Solver auto-selection (lowest NFE passing the W2 gate)",
+        "",
+        "| workload | winner | winner NFE | adaptive NFE | NFE vs adaptive |",
+        "|---|---|---|---|---|",
+    ]
+    for workload, data in report.items():
+        win, wn, an = data["winner"], data["winner_nfe"], data["adaptive_nfe"]
+        ratio = f"{wn / an:.2f}x" if (wn and an) else "n/a"
+        lines.append(
+            f"| {workload} | {win or 'NONE PASSED'} "
+            f"| {wn:.0f} | {an:.0f} | {ratio} |"
+            if wn is not None and an is not None
+            else f"| {workload} | {win or 'NONE PASSED'} | - | - | {ratio} |"
+        )
+    for workload, data in report.items():
+        lines += [
+            "",
+            f"#### `{workload}`",
+            "",
+            "| rank | solver | W2 | gate | mean NFE | passes |",
+            "|---|---|---|---|---|---|",
+        ]
+        for i, e in enumerate(data["ranking"], 1):
+            mark = "yes" if e["passes"] else "no"
+            star = " (winner)" if e["solver"] == data["winner"] else ""
+            lines.append(
+                f"| {i} | {e['solver']}{star} | {e['w2']:.4f} "
+                f"| {e['tol']:.2f} | {e['mean_nfe']:.0f} | {mark} |"
+            )
+    return "\n".join(lines) + "\n"
+
+
+def write_selection(report: dict, out_dir: Optional[str] = None):
+    """Write selection.{md,json}; returns (md_path, json_path)."""
+    if out_dir is None:
+        root = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__)))))
+        out_dir = os.path.join(root, "experiments", "conformance")
+    os.makedirs(out_dir, exist_ok=True)
+    json_path = os.path.join(out_dir, "selection.json")
+    md_path = os.path.join(out_dir, "selection.md")
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=1)
+    with open(md_path, "w") as f:
+        f.write(render_markdown(report))
+    return md_path, json_path

@@ -30,8 +30,11 @@ from repro.core.solvers import (
     euler_maruyama,
     finalize,
     get_solver,
+    heun,
     init_carry,
+    momentum,
     predictor_corrector,
+    predictor_corrector_hmc,
     probability_flow_rk45,
     resolve_config,
     solve_chunk,
@@ -47,9 +50,9 @@ __all__ = [
     "class_conditional", "classifier_free", "inpaint", "colorize",
     "AdaptiveConfig", "ForwardAdaptiveConfig", "SolveResult", "SolverCarry",
     "adaptive", "adaptive_forward", "available_solvers", "ddim",
-    "euler_maruyama", "finalize", "get_solver", "init_carry",
-    "predictor_corrector", "probability_flow_rk45", "resolve_config",
-    "solve_chunk",
+    "euler_maruyama", "finalize", "get_solver", "heun", "init_carry",
+    "momentum", "predictor_corrector", "predictor_corrector_hmc",
+    "probability_flow_rk45", "resolve_config", "solve_chunk",
     "dsm_loss", "make_loss_fn",
     "bits_per_dim", "log_likelihood",
     "sample", "sample_chunked", "solve_in_chunks",

@@ -13,7 +13,9 @@ from .adaptive import (
     resolve_config,
     solve_chunk,
 )
-from .predictor_corrector import predictor_corrector
+from .momentum import DEFAULT_BETA, momentum
+from .heun import heun
+from .predictor_corrector import predictor_corrector, predictor_corrector_hmc
 from .probability_flow import probability_flow_rk45
 from .ddim import ddim
 
@@ -32,7 +34,11 @@ __all__ = [
     "init_carry",
     "resolve_config",
     "solve_chunk",
+    "momentum",
+    "DEFAULT_BETA",
+    "heun",
     "predictor_corrector",
+    "predictor_corrector_hmc",
     "probability_flow_rk45",
     "ddim",
 ]

@@ -90,6 +90,25 @@ class AdaptiveConfig:
     #: the per-sample payload rides in ``SolverCarry.cond``. None (the
     #: default) is bit-identical to the unconditional solver.
     conditioner: Optional[Conditioner] = None
+    #: heavy-ball coefficient β of the ``momentum`` solver family
+    #: (DESIGN.md §11): both proposals gain β·(x − x_prev), the last
+    #: *accepted* displacement, and x_prev switches from "last accepted
+    #: low-order proposal" to "last accepted state" so that displacement
+    #: is well-defined. β rides outside the embedded error estimate (a
+    #: transport term shared by x' and x̃) — the W2 conformance gate is
+    #: what adjudicates it. 0.0 (the default) is bit-identical to the
+    #: plain Algorithm-1 solver.
+    momentum: float = 0.0
+    #: integrate the probability-flow ODE instead of the reverse SDE
+    #: (the ``heun`` solver family, DESIGN.md §11): the score
+    #: coefficients halve (½g² drift), the diffusion noise vanishes and
+    #: the main noise draw is skipped entirely (the PRNG stream is not
+    #: advanced), which turns the paper's extrapolated pair (x', x'')
+    #: into Heun's trapezoidal method with an embedded Euler error
+    #: estimate — an adaptive 2nd-order ODE solver with *per-sample*
+    #: step sizes (unlike the batch-global RK45 baseline). False (the
+    #: default) is bit-identical to the SDE solver.
+    probability_flow: bool = False
 
 
 def _expand(v: Array, x: Array) -> Array:
@@ -334,11 +353,19 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
     conditioner = cfg.conditioner
     policy = resolve_policy(cfg.precision)
     projecting = conditioner is not None and conditioner.has_projection
+    mom = float(cfg.momentum)
+    pf = bool(cfg.probability_flow)
 
     def em_coeffs(t, h):
-        """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars)."""
+        """x' = c0·x + c1·score + c2·z coefficients (per-sample scalars).
+
+        Probability-flow variant (DESIGN.md §11): dx = [f − ½g²s] dt, so
+        the score coefficient halves and the noise coefficient is zero.
+        """
         a = sde.drift_coeff(t)
         g = sde.diffusion(t)
+        if pf:
+            return 1.0 - h * a, 0.5 * h * g * g, jnp.zeros_like(h)
         return 1.0 - h * a, h * g * g, jnp.sqrt(h) * g
 
     def body(s: SolverCarry) -> SolverCarry:
@@ -353,8 +380,14 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         h_c = jnp.where(active, h, 0.0)
         t2 = jnp.clip(t_c - h_c, sde.t_eps, sde.T)
 
-        key, z = _draw_noise(s.key, x)
-        z = c_arr(z)
+        if pf:
+            # deterministic ODE path: no diffusion noise, and the PRNG
+            # stream is not advanced (the projection draw below still is,
+            # when a projecting conditioner needs re-noising)
+            key, z = s.key, c_arr(jnp.zeros_like(x))
+        else:
+            key, z = _draw_noise(s.key, x)
+            z = c_arr(z)
         if projecting:
             # projection noise is its own draw, taken only when a
             # projecting conditioner is active — the unconditional noise
@@ -367,20 +400,30 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         # at the state dtype (no-op under fp32 policies)
         score1 = sf(x, t_c)
         c0, c1, c2 = em_coeffs(t_c, h_c)
-        x_prime = c_arr(
-            (
-                _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
-            ).astype(x.dtype)
+        x_base = x
+        if mom:
+            # heavy-ball transport (DESIGN.md §11): v is the last
+            # accepted displacement (x_prev holds the previous accepted
+            # *state* in this family). β·v is added to both proposals —
+            # shared transport, so the embedded error estimate still
+            # measures the EM-vs-Improved-Euler discrepancy only.
+            v = x.astype(jnp.float32) - x_prev.astype(jnp.float32)
+            x_base = c_arr((x.astype(jnp.float32) + mom * v).astype(x.dtype))
+        x_prime = (
+            _expand(c0, x) * x + _expand(c1, x) * score1 + _expand(c2, x) * z
         )
+        if mom:
+            x_prime = x_prime + mom * v
+        x_prime = c_arr(x_prime.astype(x.dtype))
 
         # --- high-order proposal: stochastic Improved Euler -------------
         score2 = sf(x_prime, t2)
         e0 = h_c * sde.drift_coeff(t2)
         g2 = sde.diffusion(t2)
-        d1 = h_c * g2 * g2
-        d2 = jnp.sqrt(h_c) * g2
+        d1 = (0.5 if pf else 1.0) * h_c * g2 * g2
+        d2 = jnp.zeros_like(h_c) if pf else jnp.sqrt(h_c) * g2
         x_high, err = step_math(
-            x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs
+            x_base, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs
         )
         # the jnp step math returns x'' in fp32 (the fused kernel already
         # emits the operand dtype); the carry stores the state dtype
@@ -389,7 +432,11 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         accept = jnp.logical_and(err <= 1.0, active)
         acc_e = _expand(accept, x)
         x_new = c_arr(jnp.where(acc_e, proposal, x))
-        x_prev_new = c_arr(jnp.where(acc_e, x_prime, x_prev))
+        # momentum family: x_prev tracks the last accepted *state* (the
+        # point we stepped from) so v = x − x_prev is the accepted
+        # displacement; otherwise the last accepted low-order proposal
+        # (mixed tolerance, Eq. 5)
+        x_prev_new = c_arr(jnp.where(acc_e, x if mom else x_prime, x_prev))
         t_new = c_vec(jnp.where(accept, t - h, t))
 
         if projecting:

@@ -9,6 +9,20 @@ Langevin", Table 1) following Song et al. 2020a's PC sampler:
 
 with signal-to-noise ratio r (0.16 for VE, 0.01 for VP in the original
 code) and α = 1 (VE) or 1 − β_i (VP).
+
+Corrector seam (DESIGN.md §11): the corrector is a pluggable
+``(x, t, key) -> (x, key)`` pass selected by name, so MCMC-corrector
+families compose with the same ancestral predictor. Besides the default
+``"langevin"`` there is ``"hmc"`` — uncorrected Hamiltonian Monte Carlo
+(no Metropolis accept/reject, as in score-based HMC correctors where
+only ∇log p is available): refresh p ~ N(0, I), take L leapfrog steps
+with the score as −∇U at step size ε = sqrt(2·step)/L, where ``step``
+is the same snr-derived Langevin step. The trajectory length L·ε then
+matches the Langevin move's noise scale while the transport is
+ballistic rather than diffusive; at L = 1 the update reduces *exactly*
+to the Langevin corrector. Each HMC pass costs L score evaluations (the
+final half-kick only updates the momentum, which is discarded and
+refreshed next pass, so it is skipped rather than spent).
 """
 
 from __future__ import annotations
@@ -43,6 +57,8 @@ def predictor_corrector(
     corrector_steps: int = 1,
     snr: float | None = None,
     denoise: bool = True,
+    corrector: str = "langevin",
+    hmc_leapfrog: int = 3,
 ) -> SolveResult:
     batch = x_init.shape[0]
     is_ve = isinstance(sde, VESDE)
@@ -50,14 +66,48 @@ def predictor_corrector(
         snr = 0.16 if is_ve else 0.01
     ts = jnp.linspace(sde.T, sde.t_eps, n_steps + 1)
 
+    def _alpha(t):
+        return jnp.ones_like(t) if is_ve else 1.0 - sde.beta(t) / n_steps
+
+    def _step_size(t, z, score):
+        """snr-derived Langevin step ε = 2 α (r ‖z‖/‖s‖)², shape (B,)."""
+        return (
+            2.0 * _alpha(t)
+            * (snr * _norm(z) / jnp.maximum(_norm(score), 1e-12)) ** 2
+        )
+
     def langevin(x, t, key):
         key, sub = jax.random.split(key)
         score = score_fn(x, t)
         z = jax.random.normal(sub, x.shape, x.dtype)
-        alpha = jnp.ones_like(t) if is_ve else 1.0 - sde.beta(t) / n_steps
-        step = 2.0 * alpha * (snr * _norm(z) / jnp.maximum(_norm(score), 1e-12)) ** 2
+        step = _step_size(t, z, score)
         x = x + _e(step, x) * score + _e(jnp.sqrt(2.0 * step), x) * z
         return x, key
+
+    def hmc(x, t, key):
+        # uncorrected HMC: the refreshed momentum p plays z's role in the
+        # snr step-size rule; L leapfrog steps at ε = sqrt(2·step)/L keep
+        # the trajectory length on the Langevin move's scale (L=1 ⇒
+        # exactly the Langevin update). Final half-kick skipped: p is
+        # discarded and refreshed next pass.
+        key, sub = jax.random.split(key)
+        p = jax.random.normal(sub, x.shape, x.dtype)
+        score = score_fn(x, t)
+        step = _step_size(t, p, score)
+        eps = _e(jnp.sqrt(2.0 * step) / hmc_leapfrog, x)
+        p = p + 0.5 * eps * score
+        for leap in range(hmc_leapfrog):
+            x = x + eps * p
+            if leap + 1 < hmc_leapfrog:
+                p = p + eps * score_fn(x, t)
+        return x, key
+
+    correctors = {"langevin": (langevin, 1), "hmc": (hmc, hmc_leapfrog)}
+    if corrector not in correctors:
+        raise ValueError(
+            f"unknown corrector {corrector!r}; have {sorted(correctors)}"
+        )
+    corrector_fn, evals_per_corrector = correctors[corrector]
 
     def body(carry, i):
         x, key = carry
@@ -67,7 +117,7 @@ def predictor_corrector(
         # --- corrector first (as in Song et al.'s released sampler) ----
         def corr_body(j, val):
             x, key = val
-            return langevin(x, t, key)
+            return corrector_fn(x, t, key)
 
         x, key = jax.lax.fori_loop(0, corrector_steps, corr_body, (x, key))
 
@@ -90,7 +140,7 @@ def predictor_corrector(
         return (x, key), None
 
     (x, key), _ = jax.lax.scan(body, (x_init, key), jnp.arange(n_steps))
-    nfe_per_step = 1 + corrector_steps
+    nfe_per_step = 1 + corrector_steps * evals_per_corrector
     nfe = jnp.full((batch,), n_steps * nfe_per_step, jnp.int32)
     if denoise:
         t = jnp.full((batch,), sde.t_eps)
@@ -100,4 +150,30 @@ def predictor_corrector(
     return SolveResult(
         x=x, nfe=nfe, iterations=jnp.asarray(n_steps, jnp.int32),
         accepted=zeros, rejected=zeros,
+    )
+
+
+@register_solver("pc_hmc")
+def predictor_corrector_hmc(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    x_init: Array,
+    key: Array,
+    *,
+    n_steps: int = 1000,
+    corrector_steps: int = 1,
+    snr: float | None = None,
+    denoise: bool = True,
+    hmc_leapfrog: int = 3,
+) -> SolveResult:
+    """Ancestral predictor + uncorrected-HMC corrector (DESIGN.md §11).
+
+    The same PC sampler through the corrector seam with
+    ``corrector="hmc"``; NFE accounting reflects the L score evaluations
+    each HMC pass spends (``1 + corrector_steps·L`` per grid step).
+    """
+    return predictor_corrector(
+        sde, score_fn, x_init, key,
+        n_steps=n_steps, corrector_steps=corrector_steps, snr=snr,
+        denoise=denoise, corrector="hmc", hmc_leapfrog=hmc_leapfrog,
     )

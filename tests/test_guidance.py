@@ -48,9 +48,14 @@ CLASS_MUS = jnp.linspace(-1.0, 1.0, 10)
 KEY = jax.random.PRNGKey(0)
 
 
-def _uncond(sde, shape=(BATCH, DIM), **kw):
+def _uncond(sde, shape=(BATCH, DIM), method="adaptive", **kw):
     return sample(sde, gaussian_score(sde, MU, S0), shape, KEY,
-                  method="adaptive", eps_rel=0.05, **kw)
+                  method=method, eps_rel=0.05, **kw)
+
+
+#: every solver that rides the conditioning seam through AdaptiveConfig
+#: (DESIGN.md §11) must honor the disabled ⇒ bit-identical contract
+CARRY_METHODS = ["adaptive", "momentum", "heun"]
 
 
 # ---------------------------------------------------------------------------
@@ -66,21 +71,45 @@ def test_default_config_has_no_conditioner():
     assert AdaptiveConfig() == AdaptiveConfig(conditioner=None)
     assert dataclasses.replace(AdaptiveConfig(), eps_rel=0.05) == \
         AdaptiveConfig(eps_rel=0.05)
+    # the zoo fields (DESIGN.md §11) obey the same off-means-equal rule
+    assert AdaptiveConfig().momentum == 0.0
+    assert AdaptiveConfig().probability_flow is False
+    assert AdaptiveConfig() == AdaptiveConfig(momentum=0.0,
+                                              probability_flow=False)
 
 
-def test_cfg_scale_zero_bitwise_equals_unconditional():
+@pytest.mark.parametrize("method", CARRY_METHODS)
+def test_cfg_scale_zero_bitwise_equals_unconditional(method):
     """CFG at scale=0 evaluates the single null-labeled forward with no
     projection draw — the whole solve (samples, per-sample NFE,
-    iteration count) is bit-identical to the unconditional path."""
+    iteration count) is bit-identical to the unconditional path. Holds
+    for every carry family: momentum and Heun reuse the Algorithm-1
+    body, so the conditioning seam composes without solver changes."""
     sde = VPSDE()
-    res_u = _uncond(sde)
+    res_u = _uncond(sde, method=method)
     conditioner, cond = class_conditional(jnp.arange(BATCH) % 10, 0.0)
     res_c = sample(sde, class_gaussian_score(sde, CLASS_MUS, S0, MU),
-                   (BATCH, DIM), KEY, method="adaptive", eps_rel=0.05,
+                   (BATCH, DIM), KEY, method=method, eps_rel=0.05,
                    conditioner=conditioner, cond=cond)
     np.testing.assert_array_equal(np.asarray(res_u.x), np.asarray(res_c.x))
     np.testing.assert_array_equal(np.asarray(res_u.nfe), np.asarray(res_c.nfe))
     assert int(res_u.iterations) == int(res_c.iterations)
+
+
+@pytest.mark.parametrize("method", CARRY_METHODS)
+def test_inpaint_mask_none_bitwise_equals_unconditional(method):
+    """``inpaint(mask=None, ...)`` collapses to (None, None), so feeding
+    it straight into ``sample`` must reproduce the unconditional solve
+    bit-for-bit — the no-op inpaint cannot perturb the noise stream of
+    any carry-family solver."""
+    sde = VPSDE()
+    conditioner, cond = inpaint(None, None)
+    res_u = _uncond(sde, method=method)
+    res_c = sample(sde, gaussian_score(sde, MU, S0), (BATCH, DIM), KEY,
+                   method=method, eps_rel=0.05,
+                   conditioner=conditioner, cond=cond)
+    np.testing.assert_array_equal(np.asarray(res_u.x), np.asarray(res_c.x))
+    np.testing.assert_array_equal(np.asarray(res_u.nfe), np.asarray(res_c.nfe))
 
 
 def test_functional_classifier_free_scale_zero_is_identity():

@@ -130,8 +130,9 @@ def test_every_registered_solver_runs_on_trajectories():
     # PC's ancestral VP predictor needs a non-degenerate grid (it is
     # NaN-unstable below ~tens of steps on any workload)
     kw = {"em": dict(n_steps=5), "pc": dict(n_steps=50),
-          "ddim": dict(n_steps=5), "adaptive": dict(eps_rel=0.1),
-          "ode": {}}
+          "pc_hmc": dict(n_steps=50), "ddim": dict(n_steps=5),
+          "adaptive": dict(eps_rel=0.1), "momentum": dict(eps_rel=0.1),
+          "heun": dict(eps_rel=0.1), "ode": {}}
     for solver in available_solvers():
         res = sample(sde, score, (2, 4, 3), jax.random.PRNGKey(1),
                      method=solver, **kw[solver])

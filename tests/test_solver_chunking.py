@@ -9,6 +9,8 @@ per-sample monotone across chunk boundaries, and rejections do not bias
 the driving noise (Algorithm 2 retains z across rejections).
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,6 +23,7 @@ from repro.core import (
     adaptive_forward,
     finalize,
     init_carry,
+    inpaint,
     sample,
     solve_chunk,
     solve_in_chunks,
@@ -34,17 +37,29 @@ def _score(sde):
     return gaussian_score(sde, MU, S0)
 
 
+#: the carry-based zoo families (DESIGN.md §11) — every config variant
+#: of the Algorithm-1 body must satisfy the same §7 invariants
+FAMILY_CONFIGS = {
+    "adaptive": AdaptiveConfig(eps_rel=0.05),
+    "momentum": AdaptiveConfig(eps_rel=0.05, momentum=0.15),
+    "heun": AdaptiveConfig(eps_rel=0.05, probability_flow=True),
+}
+
+
 # ---------------------------------------------------------------------------
 # chunked ≡ monolithic
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
 @pytest.mark.parametrize("horizon", [1, 7, 64])
-def test_chained_chunks_bitwise_match_monolithic(horizon, rng):
+def test_chained_chunks_bitwise_match_monolithic(horizon, family, rng):
     """The acceptance bar: fixed seed ⇒ solve_in_chunks(max_sync_iters=N)
-    equals adaptive() bit-for-bit, for any chunk size."""
+    equals the monolithic solve bit-for-bit, for any chunk size — for
+    every carry-based zoo family (they share the Algorithm-1 body, so
+    they must inherit the §7 invariant, not re-prove it)."""
     sde = VPSDE()
-    cfg = AdaptiveConfig(eps_rel=0.05)
+    cfg = FAMILY_CONFIGS[family]
     mono = jax.jit(
         lambda k: sample(sde, _score(sde), (8, 16), k, config=cfg)
     )(rng)
@@ -112,25 +127,82 @@ def test_per_slot_keys_match_shared_key_statistics(rng):
     assert float(res.x.mean()) == pytest.approx(float(m) * MU, abs=0.06)
 
 
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
+def test_compaction_permutation_moves_payload_with_slots(family, rng):
+    """Slot compaction in miniature, for every carry family: under
+    per-slot keys, permuting every leading-B carry leaf mid-solve —
+    state, x_prev (the momentum buffer), keys, AND the cond payload —
+    and continuing must equal the unpermuted solve with slots relabeled.
+    If a payload leaf failed to travel with its slot, the inpainting
+    projection would pin the wrong rows and the comparison would break;
+    this is exactly the move DiffusionBatcher's compaction performs."""
+    sde = VPSDE()
+    B, D = 8, 8
+    observed = MU + S0 * jax.random.normal(jax.random.PRNGKey(5), (B, D))
+    mask = jnp.zeros((B, D)).at[:, : D // 2].set(1.0)
+    conditioner, cond = inpaint(mask, observed)
+    cfg = dataclasses.replace(FAMILY_CONFIGS[family], conditioner=conditioner)
+
+    k_prior, k_solve = jax.random.split(rng)
+    x0 = sde.prior_sample(k_prior, (B, D))
+    keys = jax.random.split(k_solve, B)  # per-slot: noise is slot-invariant
+    step = jax.jit(
+        lambda c: solve_chunk(sde, _score(sde), c, max_sync_iters=4,
+                              config=cfg)
+    )
+
+    def run_to_done(carry):
+        while bool(jnp.any(~carry.done)):
+            carry = step(carry)
+        return finalize(sde, _score(sde), carry, denoise=False,
+                        conditioner=cfg.conditioner)
+
+    carry = init_carry(sde, x0, keys, config=cfg, cond=cond)
+    carry = step(carry)  # mid-flight: slots hold heterogeneous (t, h)
+
+    perm = np.array([3, 0, 7, 1, 5, 2, 6, 4])
+    permuted = jax.tree_util.tree_map(
+        lambda leaf: leaf[perm]
+        if hasattr(leaf, "ndim") and leaf.ndim >= 1 and leaf.shape[0] == B
+        else leaf,
+        carry,
+    )
+
+    res = run_to_done(carry)
+    res_p = run_to_done(permuted)
+    for field in ("x", "nfe", "accepted", "rejected"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, field))[perm],
+            np.asarray(getattr(res_p, field)),
+            err_msg=field,
+        )
+
+
 # ---------------------------------------------------------------------------
 # NFE / accounting invariants
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("family", sorted(FAMILY_CONFIGS))
 @pytest.mark.parametrize("denoise", [False, True], ids=["raw", "denoise"])
-def test_nfe_identity(denoise, rng):
-    """nfe == 2·(accepted + rejected) (+1 for the Tweedie denoise)."""
+def test_nfe_identity(denoise, family, rng):
+    """nfe == 2·(accepted + rejected) (+1 for the Tweedie denoise) — the
+    Algorithm-1 accounting invariant, for every carry-based family."""
     sde = VPSDE()
+    cfg = dataclasses.replace(FAMILY_CONFIGS[family], eps_rel=0.03)
     res = jax.jit(
-        lambda k: sample(sde, _score(sde), (32, 8), k, method="adaptive",
-                         eps_rel=0.03, denoise=denoise)
+        lambda k: sample(sde, _score(sde), (32, 8), k, config=cfg,
+                         denoise=denoise)
     )(rng)
     want = 2 * (np.asarray(res.accepted) + np.asarray(res.rejected))
     if denoise:
         want = want + 1
     np.testing.assert_array_equal(np.asarray(res.nfe), want)
-    # rejections happened, so the identity covers the reject branch too
-    assert int(res.rejected.sum()) > 0
+    if family == "adaptive":
+        # rejections happened, so the identity covers the reject branch
+        # too (the stochastic family at this tolerance always rejects;
+        # the deterministic Heun path may legitimately never reject)
+        assert int(res.rejected.sum()) > 0
 
 
 def test_counters_monotone_across_chunks(rng):

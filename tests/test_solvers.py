@@ -35,7 +35,10 @@ def gaussian_score(sde):
 SOLVERS = [
     ("em", dict(n_steps=200), 0.06),
     ("adaptive", dict(eps_rel=0.05), 0.06),
+    ("momentum", dict(eps_rel=0.05), 0.06),
+    ("heun", dict(eps_rel=0.05), 0.06),
     ("pc", dict(n_steps=100), 0.20),
+    ("pc_hmc", dict(n_steps=100), 0.20),
     ("ode", {}, 0.06),
 ]
 

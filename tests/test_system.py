@@ -10,7 +10,8 @@ from repro.core import (
 
 def test_solver_registry_complete():
     have = set(available_solvers())
-    assert {"adaptive", "em", "pc", "ode", "ddim"} <= have
+    assert {"adaptive", "em", "pc", "ode", "ddim",
+            "momentum", "heun", "pc_hmc"} <= have
 
 
 def test_sde_factory():
