@@ -1,0 +1,162 @@
+"""Device-resident serve loop vs the host-driven chunk chain (DESIGN.md §12).
+
+The host-driven ``DiffusionBatcher`` loop pays O(sync horizons) device→host
+round-trips per solve: every horizon pulls the (B,) convergence mask (plus
+the iteration counter) even when nothing converged. The device-resident
+mode folds retirement polling, compaction, and admission into donated
+on-device programs and reads back one scalar event flag per driver call —
+host traffic becomes O(delivered requests).
+
+Per sync horizon this bench drains the same request wave through both
+modes and reports:
+
+  * ``host_transfers_per_request`` — every ``jax.device_get`` the serve
+    loop issued, divided by delivered requests. The acceptance gate from
+    the issue: ≥5× lower device-resident at sync_horizon ≤ 8.
+  * steady-state ``samples_per_s`` wall-clock, comparable against the
+    ``compaction`` suite's numbers (same analytic-score workload family).
+
+The second section times the fused solver-step kernel on the
+*trajectory-shaped* rows the planning server feeds it — (H=16, D=6) and
+(H=32, D=8) states flatten to 96/256 features, far below the default
+512-lane block — comparing the auto-widened batch block
+(``kernel._blocks_for``) against the legacy fixed (8, bd) tile.
+
+  PYTHONPATH=src python -m benchmarks.bench_device_serving [--slots 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import AdaptiveConfig, VPSDE
+from repro.core.analytic import gaussian_noise_pred
+from repro.kernels.solver_step import kernel as _k
+from repro.launch.sample import make_sample_step
+from repro.models.dit import DiTConfig
+from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+MU, S0 = 0.3, 0.5
+DIM = 2          # low-d: widest per-sample NFE spread (cf. bench_compaction)
+REQUESTS_PER_SLOT = 3
+SYNC_HORIZONS = (1, 4, 8)
+
+
+def _make_step(sde, cfg):
+    net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
+                    num_heads=1, d_ff=8)  # signature holder; forward_fn wins
+    return make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde, MU, S0))
+
+
+def _run(sde, cfg, step, slots: int, sync_horizon: int,
+         device_resident: bool):
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(DIM,),
+                         slots=slots, cfg=cfg, sync_horizon=sync_horizon,
+                         device_resident=device_resident)
+    # warmup drain: compiles this batcher's driver/event programs (their
+    # jit caches are per-instance closures) outside the timed region
+    for uid in range(slots):
+        b.submit(ImageRequest(uid=10_000 + uid, seed=10_000 + uid))
+    b.run_to_completion()
+    t_before, w_before, i_before = (
+        b.host_transfers, b.horizon_windows, b.total_iterations)
+    n_total = REQUESTS_PER_SLOT * slots
+    for uid in range(n_total):
+        b.submit(ImageRequest(uid=uid, seed=uid))
+    t0 = time.perf_counter()
+    done = b.run_to_completion()
+    dt = time.perf_counter() - t0
+    assert len(done) == slots + n_total
+    transfers = b.host_transfers - t_before
+    return {
+        "transfers": transfers,
+        "per_req": transfers / n_total,
+        "windows": b.horizon_windows - w_before,
+        "iters": b.total_iterations - i_before,
+        "wall_s": dt,
+        "sps": n_total / dt,
+    }
+
+
+def _bench_serving(slots: int) -> None:
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    step = _make_step(sde, cfg)
+    for horizon in SYNC_HORIZONS:
+        host = _run(sde, cfg, step, slots, horizon, device_resident=False)
+        dev = _run(sde, cfg, step, slots, horizon, device_resident=True)
+        ratio = host["per_req"] / max(dev["per_req"], 1e-9)
+        for mode, r in (("host", host), ("device", dev)):
+            emit(
+                f"device_serving/h{horizon}/{mode}",
+                r["wall_s"] * 1e6,
+                f"host_transfers_per_request={r['per_req']:.2f};"
+                f"transfers={r['transfers']};windows={r['windows']};"
+                f"iters={r['iters']};samples_per_s={r['sps']:.2f}",
+            )
+        emit(f"device_serving/h{horizon}/ratio", 0.0,
+             f"host_transfers_host_over_device={ratio:.1f}x")
+
+
+def _time_error_step(B: int, D: int, reps: int, **blocks) -> float:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    mk = lambda k: jax.random.normal(k, (B, D), jnp.float32)
+    x, xp, s2, z, xv = (mk(k) for k in ks[:5])
+    e0, d1, d2 = (jax.random.normal(k, (B,), jnp.float32) for k in ks[5:])
+    fn = functools.partial(
+        _k.error_step, eps_abs=0.01, eps_rel=0.05, use_prev=True,
+        interpret=jax.default_backend() == "cpu", **blocks,
+    )
+    out = fn(x, xp, s2, z, xv, e0, d1, d2)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(x, xp, s2, z, xv, e0, d1, d2)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _bench_trajectory_blocks(reps: int = 10) -> None:
+    """Auto-widened vs legacy tile on trajectory-shaped (B, flat) rows.
+
+    Shapes mirror the planning server's carries: (H=16, D=6) → 96 flat
+    features (lane-padded to 128) and (H=32, D=8) → 256. Passing an
+    explicit ``block_d`` equal to the padded width reproduces the legacy
+    fixed (8, bd) tile — same bd as the auto path, so the measured gap
+    isolates the widened batch block (fewer grid programs per call).
+    """
+    for name, flat in (("traj16x6", 96), ("traj32x8", 256)):
+        B, Dpad = 64, -(-flat // 128) * 128
+        legacy = _time_error_step(B, Dpad, reps, block_d=Dpad)
+        tuned = _time_error_step(B, Dpad, reps)
+        bb_t, _ = _k._blocks_for(jnp.float32, B, Dpad,
+                                 _k.DEFAULT_BLOCK_B, _k.DEFAULT_BLOCK_D)
+        emit(
+            f"device_serving/kernel/{name}",
+            tuned * 1e6,
+            f"legacy_us={legacy * 1e6:.1f};block_b={bb_t};"
+            f"speedup={legacy / max(tuned, 1e-12):.2f}x",
+        )
+
+
+def main(argv=()) -> None:
+    # default () so benchmarks.run's own flags never leak into this parser
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=8)
+    args = ap.parse_args(argv)
+    _bench_serving(args.slots)
+    _bench_trajectory_blocks()
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

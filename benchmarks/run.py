@@ -12,6 +12,7 @@ import time
 
 from . import (
     bench_compaction,
+    bench_device_serving,
     bench_dimensionality,
     bench_guidance,
     bench_kernels,
@@ -36,6 +37,7 @@ SUITES = {
     "serving": bench_serving.main,
     "sharded_sampling": bench_sharded_sampling.main,  # 1-vs-N device scaling
     "compaction": bench_compaction.main,   # slot compaction vs monolithic
+    "device_serving": bench_device_serving.main,  # host-sync traffic A/B
     "precision": bench_precision.main,     # fp32/bf16/bf16_full policies
     "guidance": bench_guidance.main,       # conditioning NFE overhead
     "planning": bench_planning.main,       # trajectory workload + planner loop

@@ -24,6 +24,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.sde import SDE
 from repro.core.solvers import SolveResult, get_solver
@@ -54,6 +55,28 @@ def _finalize_jit(sde, score_fn):
     return jax.jit(
         functools.partial(finalize, sde, score_fn),
         static_argnames=("denoise", "precision", "conditioner"),
+    )
+
+
+@functools.lru_cache(maxsize=8)
+def _chunk_jit(sde, score_fn, cfg, max_sync_iters, sharding):
+    """Jitted ``solve_chunk`` closure for one solve configuration.
+
+    ``solve_in_chunks`` used to build ``jax.jit(lambda c: ...)`` fresh on
+    every call — a new Python callable each time, so jax's trace cache
+    never hit and every call paid a full retrace+compile even with
+    identical (config, carry structure, mesh). Keying the closure on the
+    hashable configuration tuple instead makes repeat calls — the
+    benchmark/serving pattern — reuse one compiled chunk; the carry's
+    shape struct is then deduplicated by jax's own cache under this
+    single stable callable. Bounded like ``_finalize_jit`` so one-shot
+    configurations don't pin their captures forever.
+    """
+    return jax.jit(
+        functools.partial(
+            solve_chunk, sde, score_fn,
+            max_sync_iters=max_sync_iters, config=cfg, sharding=sharding,
+        )
     )
 
 
@@ -130,11 +153,12 @@ def solve_in_chunks(
     result is bit-identical to the monolithic ``sample(method=
     'adaptive')`` for the same key.
 
-    Each call jits a fresh chunk closure (one trace+compile per call).
-    Callers invoking this repeatedly with the same configuration should
-    pass ``chunk_fn`` — a prebuilt jitted ``carry -> carry`` chunk (what
-    the serving loop does via ``make_sample_step``) — to amortize the
-    compile across calls.
+    The default chunk closure is cached per (sde, score_fn, config,
+    max_sync_iters, sharding) — repeat calls with the same configuration
+    reuse one compiled chunk instead of retracing (``_chunk_jit``).
+    Callers needing a custom step (e.g. the serving loop's
+    ``make_sample_step``, which folds in network params) pass
+    ``chunk_fn`` — a prebuilt jitted ``carry -> carry`` chunk.
 
     ``cond`` is the optional per-sample condition payload for
     ``cfg.conditioner`` (DESIGN.md §9); it rides in the carry through
@@ -151,12 +175,8 @@ def solve_in_chunks(
         x_init = jax.lax.with_sharding_constraint(x_init, sharding)
     carry = init_carry(sde, x_init, k_solve, config=cfg, sharding=sharding,
                        cond=cond)
-    chunk = chunk_fn or jax.jit(
-        lambda c: solve_chunk(
-            sde, score_fn, c,
-            max_sync_iters=max_sync_iters, config=cfg, sharding=sharding,
-        )
-    )
+    chunk = chunk_fn or _chunk_jit(sde, score_fn, cfg, max_sync_iters,
+                                   sharding)
     # loop on the carry's own (already device-reduced) done mask — one
     # scalar crosses to the host per chunk, never the full (B,) t vector
     while not bool(carry.done.all()) and int(carry.iterations) < cfg.max_iters:
@@ -182,9 +202,18 @@ def sample_chunked(
 ):
     """Generate many samples in fixed-size chunks (host loop, jit inner).
 
-    Returns (samples (N, ...), mean NFE) — used by the FID-style
-    benchmarks (DESIGN.md §6) that need tens of thousands of samples.
-    ``mesh`` shards each chunk's batch axis, as in ``sample``.
+    Returns (samples (N, ...), mean NFE) as host numpy — used by the
+    FID-style benchmarks (DESIGN.md §6) that need tens of thousands of
+    samples. ``mesh`` shards each chunk's batch axis, as in ``sample``.
+
+    Two throughput details matter at that scale: the chunks are already
+    host arrays, so they are joined with ``np.concatenate`` (the old
+    ``jnp.concatenate`` round-tripped every chunk *back* to the device
+    and materialized the full (N, ...) result there — at FID scale that
+    re-upload both doubled transfer volume and could OOM device memory);
+    and each chunk's ``device_get`` is issued only after the *next*
+    chunk has been dispatched, so the d2h copy of chunk i overlaps the
+    device compute of chunk i+1 instead of serializing with it.
     """
     fn = jax.jit(
         lambda k: sample(
@@ -193,12 +222,17 @@ def sample_chunked(
         )
     )
     outs, nfes = [], []
+    pending = None  # previous chunk's (x, nfe), still device-resident
     n_chunks = (n_samples + chunk - 1) // chunk
     for i in range(n_chunks):
         key, sub = jax.random.split(key)
-        res = fn(sub)
-        outs.append(jax.device_get(res.x))
-        nfes.append(jax.device_get(res.nfe))
-    x = jnp.concatenate([jnp.asarray(o) for o in outs])[:n_samples]
-    nfe = jnp.concatenate([jnp.asarray(v) for v in nfes])[:n_samples]
-    return x, float(jnp.mean(nfe))
+        res = fn(sub)  # async dispatch: device starts chunk i now
+        if pending is not None:  # ...while chunk i-1 copies out
+            outs.append(jax.device_get(pending[0]))
+            nfes.append(jax.device_get(pending[1]))
+        pending = (res.x, res.nfe)
+    outs.append(jax.device_get(pending[0]))
+    nfes.append(jax.device_get(pending[1]))
+    x = np.concatenate(outs)[:n_samples]
+    nfe = np.concatenate(nfes)[:n_samples]
+    return x, float(nfe.mean())

@@ -1,6 +1,12 @@
 """Solver suite: the paper's adaptive solver plus every baseline it compares to."""
 
-from .base import SolveResult, available_solvers, get_solver, register_solver
+from .base import (
+    SolveResult,
+    available_solvers,
+    get_solver,
+    register_solver,
+    solver_nfe_per_iteration,
+)
 from .euler_maruyama import euler_maruyama
 from .adaptive import (
     AdaptiveConfig,
@@ -8,10 +14,12 @@ from .adaptive import (
     SolverCarry,
     adaptive,
     adaptive_forward,
+    events_pending,
     finalize,
     init_carry,
     resolve_config,
     solve_chunk,
+    solve_horizons,
 )
 from .momentum import DEFAULT_BETA, momentum
 from .heun import heun
@@ -25,6 +33,9 @@ __all__ = [
     "available_solvers",
     "get_solver",
     "register_solver",
+    "solver_nfe_per_iteration",
+    "events_pending",
+    "solve_horizons",
     "euler_maruyama",
     "AdaptiveConfig",
     "ForwardAdaptiveConfig",

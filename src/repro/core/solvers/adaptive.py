@@ -533,6 +533,80 @@ def solve_chunk(
     return jax.lax.while_loop(cond, body, carry)
 
 
+def events_pending(carry: SolverCarry, occupied: Array, *,
+                   wait_all: bool = False) -> Array:
+    """Device-side serving event flag (DESIGN.md §12): does the host
+    have anything to do with this carry?
+
+    An *event* is a pending delivery: with ``wait_all=False`` (the
+    compaction discipline) any occupied slot whose sample converged;
+    with ``wait_all=True`` (the monolithic-wave baseline) the whole
+    occupied set having converged. ``occupied`` is the host's (B,) slot-
+    occupancy mask — host knowledge the device cannot derive from
+    ``done`` alone, since idle slots also ride with ``done=True``.
+    Returns a scalar bool that stays on device until the host chooses to
+    read it — the sole per-horizon-window device→host transfer of the
+    device-resident serve loop.
+    """
+    running = jnp.logical_and(occupied, jnp.logical_not(carry.done))
+    if wait_all:
+        return jnp.logical_and(jnp.any(occupied), jnp.logical_not(jnp.any(running)))
+    return jnp.any(jnp.logical_and(occupied, carry.done))
+
+
+def solve_horizons(
+    sde: SDE,
+    score_fn: Callable[[Array, Array], Array],
+    carry: SolverCarry,
+    occupied: Array,
+    *,
+    sync_horizon: int,
+    max_horizons: int,
+    config: AdaptiveConfig | None = None,
+    sharding=None,
+    wait_all: bool = False,
+    **overrides,
+) -> tuple[SolverCarry, Array]:
+    """Multi-horizon device driver: chain ``solve_chunk`` horizons in a
+    ``lax.while_loop`` until a serving event is pending (DESIGN.md §12).
+
+    Each outer iteration runs one ``sync_horizon``-bounded chunk — the
+    exact unit the host-driven serve loop dispatches per round-trip — so
+    retirement granularity is identical to chaining the chunks from the
+    host, and the per-slot-key invariance makes the delivered samples
+    bit-identical. What changes is *where the polling loop runs*: the
+    convergence check between horizons happens device-side against the
+    ``occupied`` mask, and the host reads back a single scalar event
+    flag per driver call instead of per horizon. ``max_horizons`` bounds
+    one call (the host regains control even if nothing converges, e.g.
+    a straggler-bound monolithic wave).
+
+    Returns ``(carry, events)`` with ``events`` the scalar
+    ``events_pending`` flag at exit. Stops as soon as the event fires,
+    every occupied sample converged, or ``max_horizons`` chunks ran.
+    """
+    cfg = resolve_config(config, overrides)
+
+    def cond(state):
+        c, n = state
+        running = jnp.any(jnp.logical_and(occupied, jnp.logical_not(c.done)))
+        no_event = jnp.logical_not(
+            events_pending(c, occupied, wait_all=wait_all)
+        )
+        return running & no_event & (n < max_horizons)
+
+    def body(state):
+        c, n = state
+        c = solve_chunk(
+            sde, score_fn, c,
+            max_sync_iters=sync_horizon, config=cfg, sharding=sharding,
+        )
+        return c, n + 1
+
+    carry, _ = jax.lax.while_loop(cond, body, (carry, jnp.asarray(0, jnp.int32)))
+    return carry, events_pending(carry, occupied, wait_all=wait_all)
+
+
 def finalize(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],
@@ -574,7 +648,7 @@ def finalize(
     )
 
 
-@register_solver("adaptive")
+@register_solver("adaptive", nfe_per_iter=2)
 def adaptive(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

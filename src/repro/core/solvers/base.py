@@ -52,13 +52,55 @@ class SolveResult:
 
 _REGISTRY: Dict[str, Callable[..., Any]] = {}
 
+#: solver name → per-iteration NFE rule: an int, or a callable over the
+#: solver's own kwargs returning one. One loop iteration = one pass of
+#: the solver's device body over the whole batch (what serving pays per
+#: ``total_iterations`` tick), so this is the exact conversion factor
+#: between iterations and issued score-net evaluations (DESIGN.md §7).
+_NFE_PER_ITER: Dict[str, Any] = {}
 
-def register_solver(name: str):
+
+def register_solver(name: str, *, nfe_per_iter: Any = None):
+    """Register a solver, optionally with its per-iteration NFE rule.
+
+    ``nfe_per_iter`` is an int for fixed-cost bodies (2 for the
+    Algorithm-1 families: two score evaluations per iteration) or a
+    callable over the solver's keyword arguments for families whose cost
+    is a function of their configuration (``pc_hmc`` issues
+    ``1 + corrector_steps·hmc_leapfrog`` per grid step). Serving's waste
+    accounting reads it via ``solver_nfe_per_iteration`` — hardcoding 2
+    there produced negative waste fractions for any non-adaptive family.
+    """
+
     def deco(fn):
         _REGISTRY[name] = fn
+        if nfe_per_iter is not None:
+            _NFE_PER_ITER[name] = nfe_per_iter
         return fn
 
     return deco
+
+
+def solver_nfe_per_iteration(name: str, **solver_kwargs) -> int:
+    """Score-net evaluations one loop iteration of ``name`` issues.
+
+    ``solver_kwargs`` are the same keyword arguments the solver itself
+    would receive (only the cost-relevant ones are consulted; the rest
+    are ignored). Raises ``ValueError`` for unregistered solvers or
+    solvers that declared no rule, so accounting can never silently fall
+    back to a wrong constant (DESIGN.md §7).
+    """
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown solver '{name}'; available: {sorted(_REGISTRY)}"
+        )
+    try:
+        rule = _NFE_PER_ITER[name]
+    except KeyError:
+        raise ValueError(
+            f"solver '{name}' declared no per-iteration NFE rule"
+        ) from None
+    return int(rule(**solver_kwargs)) if callable(rule) else int(rule)
 
 
 def get_solver(name: str) -> Callable[..., Any]:

@@ -22,7 +22,7 @@ from .base import SolveResult, register_solver
 Array = jax.Array
 
 
-@register_solver("ddim")
+@register_solver("ddim", nfe_per_iter=1)
 def ddim(
     sde: VPSDE,
     score_fn: Callable[[Array, Array], Array],

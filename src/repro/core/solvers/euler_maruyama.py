@@ -19,7 +19,7 @@ from .base import SolveResult, register_solver
 Array = jax.Array
 
 
-@register_solver("em")
+@register_solver("em", nfe_per_iter=1)
 def euler_maruyama(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

@@ -30,7 +30,7 @@ from .base import SolveResult, register_solver
 Array = jax.Array
 
 
-@register_solver("heun")
+@register_solver("heun", nfe_per_iter=2)
 def heun(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

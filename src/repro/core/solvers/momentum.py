@@ -37,7 +37,7 @@ Array = jax.Array
 DEFAULT_BETA = 0.15
 
 
-@register_solver("momentum")
+@register_solver("momentum", nfe_per_iter=2)
 def momentum(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

@@ -46,7 +46,15 @@ def _norm(v: Array) -> Array:
     return jnp.sqrt(jnp.sum(v * v, axis=tuple(range(1, v.ndim))))
 
 
-@register_solver("pc")
+def _pc_nfe_per_iter(corrector_steps: int = 1, corrector: str = "langevin",
+                     hmc_leapfrog: int = 3, **_) -> int:
+    """1 predictor eval + corrector passes: Langevin costs 1 eval each,
+    HMC costs L leapfrog evals (final half-kick elided, see ``hmc``)."""
+    per_pass = hmc_leapfrog if corrector == "hmc" else 1
+    return 1 + corrector_steps * per_pass
+
+
+@register_solver("pc", nfe_per_iter=_pc_nfe_per_iter)
 def predictor_corrector(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],
@@ -153,7 +161,13 @@ def predictor_corrector(
     )
 
 
-@register_solver("pc_hmc")
+def _pc_hmc_nfe_per_iter(corrector_steps: int = 1, hmc_leapfrog: int = 3,
+                         **_) -> int:
+    return _pc_nfe_per_iter(corrector_steps=corrector_steps, corrector="hmc",
+                            hmc_leapfrog=hmc_leapfrog)
+
+
+@register_solver("pc_hmc", nfe_per_iter=_pc_hmc_nfe_per_iter)
 def predictor_corrector_hmc(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

@@ -36,7 +36,7 @@ _B4 = jnp.array(
 )
 
 
-@register_solver("ode")
+@register_solver("ode", nfe_per_iter=6)
 def probability_flow_rk45(
     sde: SDE,
     score_fn: Callable[[Array, Array], Array],

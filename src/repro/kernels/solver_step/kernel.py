@@ -50,6 +50,34 @@ def _block_b_for(dtype, block_b: int) -> int:
     return block_b
 
 
+def _blocks_for(dtype, B: int, D: int, block_b: int, block_d: int):
+    """Resolve the (bb, bd) tile for a (B, D) operand.
+
+    Image-scale states (D ≫ 512) keep the default (8, 512) tile. But
+    trajectory-planning states flatten *narrow*: (H=16, D=6) → 96 and
+    (H=32, D=8) → 256 flat features, lane-padded to 128/256 — far below
+    DEFAULT_BLOCK_D, and not multiples of the default 512 either. With
+    the default tile those rows launch one grid program per 8 slots
+    touching a sliver of VMEM each, so the per-program overhead dominates
+    the (tiny) elementwise work. When the caller left both blocks at
+    their defaults and D underfills the default lane block, widen the
+    *batch* block instead to keep roughly the default tile footprint
+    (bb·bd ≈ 8·512 elements), sublane-aligned (8 fp32 / 16 bf16) and
+    clamped to B — measured ~2-4× fewer grid programs on the
+    traj16x6/traj32x8 serving rows (benchmarks/bench_device_serving.py)
+    with bit-identical outputs (rows are independent; the D-grid sweep
+    per row is unchanged).
+    """
+    bb = _block_b_for(dtype, block_b)
+    bd = min(block_d, D)
+    if (block_b == DEFAULT_BLOCK_B and block_d == DEFAULT_BLOCK_D
+            and D < DEFAULT_BLOCK_D):
+        sublanes = 16 if jnp.dtype(dtype).itemsize < 4 else 8
+        widened = (DEFAULT_BLOCK_B * DEFAULT_BLOCK_D // bd) // sublanes * sublanes
+        bb = max(bb, min(widened, B))
+    return min(bb, B), bd
+
+
 def _em_kernel(x_ref, s_ref, z_ref, c0_ref, c1_ref, c2_ref, out_ref):
     c0 = c0_ref[:, :]  # (bb, 1) fp32, broadcasts over lanes
     c1 = c1_ref[:, :]
@@ -75,7 +103,7 @@ def em_step(
 ) -> Array:
     """x' = c0·x + c1·score + c2·z, one fused HBM pass (fp32 math)."""
     B, D = x.shape
-    bb, bd = min(_block_b_for(x.dtype, block_b), B), min(block_d, D)
+    bb, bd = _blocks_for(x.dtype, B, D, block_b, block_d)
     grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
     coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
     state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
@@ -147,7 +175,7 @@ def error_step(
     """Fused x̃/x''/δ/residual-reduction. Returns (x'' (B,D) in x's
     dtype, e2 (B,) fp32 — the error/decision path never downcasts)."""
     B, D = x.shape
-    bb, bd = min(_block_b_for(x.dtype, block_b), B), min(block_d, D)
+    bb, bd = _blocks_for(x.dtype, B, D, block_b, block_d)
     grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
     state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
     coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))

@@ -89,7 +89,8 @@ def serve_batch(
 def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
                     sync_horizon: int = 4, compaction: bool = True,
                     precision: str = "fp32", inpaint: bool = False,
-                    cfg_scale: float | None = None) -> dict:
+                    cfg_scale: float | None = None,
+                    device_resident: bool = False) -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
@@ -99,6 +100,12 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     converged slots retired and refilled at every sync (DESIGN.md §7).
     Returns (and prints) throughput, the wasted-NFE fraction, and the
     per-device refill counts that evidence shard-local compaction.
+
+    ``device_resident=True`` (DESIGN.md §12) runs the on-device serve
+    loop instead: retirement polling, compaction, and admission execute
+    in donated jitted programs, and the host is consulted only when a
+    delivery or admission actually occurs — the printed record then
+    also carries host-transfer counts.
 
     Per-request conditioning (DESIGN.md §9): ``inpaint=True`` attaches
     a checkerboard mask (phase alternating per request) to every
@@ -138,7 +145,8 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     shape = (image_size, image_size, net.channels)
     b = DiffusionBatcher(sde, step, params, shape,
                          slots=slots, cfg=cfg, mesh=mesh,
-                         sync_horizon=sync_horizon, compaction=compaction)
+                         sync_horizon=sync_horizon, compaction=compaction,
+                         device_resident=device_resident)
 
     def request_cond(uid: int):
         if inpaint:
@@ -175,13 +183,18 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "total_iterations": b.total_iterations,
         "wasted_nfe_fraction": b.wasted_nfe_fraction,
         "refills_per_device": list(b.refills_per_device),
+        "device_resident": device_resident,
+        "host_transfers": b.host_transfers,
+        "host_transfers_per_request": b.host_transfers / max(len(done), 1),
     }
-    print(f"diffusion serve[{policy.name}, {rec['conditioner']}]: "
+    print(f"diffusion serve[{policy.name}, {rec['conditioner']}"
+          f"{', device-resident' if device_resident else ''}]: "
           f"{rec['completed']}/{requests} requests in {dt:.1f}s "
           f"({rec['samples_per_sec']:.2f} samples/s) on {ndev} device(s), "
           f"{b.slots_per_device} slots/device, horizon {sync_horizon}, "
           f"mean NFE {rec['mean_nfe']:.0f}, "
           f"wasted NFE {rec['wasted_nfe_fraction']:.1%}, "
+          f"host transfers/request {rec['host_transfers_per_request']:.1f}, "
           f"refills/device {rec['refills_per_device']}")
     return rec
 
@@ -217,6 +230,9 @@ def main() -> None:
                     help="device iterations per host sync (diffusion mode)")
     ap.add_argument("--no-compaction", action="store_true",
                     help="monolithic-wave baseline: no mid-flight slot refill")
+    ap.add_argument("--device-resident", action="store_true",
+                    help="on-device serve loop (DESIGN.md §12): donated "
+                         "carry, event-driven host syncs (diffusion mode)")
     ap.add_argument("--precision", default="fp32", choices=sorted(PRESETS),
                     help="precision policy for the diffusion server "
                          "(DESIGN.md §8); error control always stays fp32")
@@ -244,7 +260,8 @@ def main() -> None:
                         sync_horizon=args.sync_horizon,
                         compaction=not args.no_compaction,
                         precision=args.precision,
-                        inpaint=args.inpaint, cfg_scale=args.cfg_scale)
+                        inpaint=args.inpaint, cfg_scale=args.cfg_scale,
+                        device_resident=args.device_resident)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

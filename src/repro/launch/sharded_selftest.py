@@ -143,6 +143,50 @@ def check_batcher(mesh) -> dict:
     }
 
 
+def check_device_resident(mesh) -> dict:
+    """Device-resident serving on a real mesh (DESIGN.md §12): the
+    donated multi-horizon driver + on-device event program must deliver
+    bit-identical samples to the host-driven sharded loop, with fewer
+    device→host transfers."""
+    from repro.launch.sample import make_sample_step
+    from repro.models.dit import DiTConfig
+    from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
+                    num_heads=1, d_ff=8)
+    step = make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde))
+    ndev = jax.device_count()
+    slots, n_req = 2 * ndev, 6 * ndev
+
+    def run(device_resident):
+        b = DiffusionBatcher(sde, step, params=None, sample_shape=(32,),
+                             slots=slots, cfg=cfg, mesh=mesh,
+                             sync_horizon=4,
+                             device_resident=device_resident)
+        for uid in range(n_req):
+            b.submit(ImageRequest(uid=uid, seed=uid))
+        done = b.run_to_completion()
+        return b, done
+
+    b_host, done_host = run(False)
+    b_res, done_res = run(True)
+    completed = len(done_host) == n_req and len(done_res) == n_req
+    return {
+        "all_completed": completed,
+        "bitwise_equal": completed and all(
+            np.array_equal(done_host[u].result, done_res[u].result)
+            for u in range(n_req)
+        ),
+        "iterations_equal": b_host.total_iterations == b_res.total_iterations,
+        "host_transfers": b_host.host_transfers,
+        "resident_transfers": b_res.host_transfers,
+        "transfers_reduced": b_res.host_transfers < b_host.host_transfers,
+    }
+
+
 def main() -> int:
     ndev = jax.device_count()
     mesh = jax.make_mesh((ndev,), ("data",))
@@ -153,6 +197,7 @@ def main() -> int:
         "sample_fused": check_sample_equivalence(mesh, fused=True),
         "fused_kernel": check_fused_kernel(mesh2d),
         "batcher": check_batcher(mesh),
+        "device_resident": check_device_resident(mesh),
     }
     ok = (
         ndev >= 2
@@ -166,6 +211,9 @@ def main() -> int:
         and results["batcher"]["per_device_refill"]
         and results["batcher"]["total_assignments_match"]
         and results["batcher"]["scheduling_invariant"]
+        and results["device_resident"]["bitwise_equal"]
+        and results["device_resident"]["iterations_equal"]
+        and results["device_resident"]["transfers_reduced"]
     )
     results["ok"] = ok
     print(json.dumps(results))

@@ -252,3 +252,23 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
         nfe=vec, accepted=vec, rejected=vec, done=vec, iterations=rep,
         cond=cond_s,
     )
+
+
+def serving_loop_shardings(mesh: Mesh, batch: int, state_ndim: int,
+                           *, per_slot_keys: bool = True, cond=None):
+    """Donation-safe sharding pair for the device-resident serve loop
+    (DESIGN.md §12): ``(carry_shardings, scalar_sharding)``.
+
+    XLA only elides a donated buffer when the donated input and the
+    matching output share one sharding, so the device-resident driver
+    and event update must pin ``out_shardings`` to the *same*
+    ``solver_carry_shardings`` tree the carry was placed with — a
+    mismatched (e.g. inferred) output sharding would silently turn
+    donation into a copy plus a resharding collective. The scalar
+    sharding (replicated) covers the driver's event flag and any other
+    per-call scalar riding next to the carry.
+    """
+    carry = solver_carry_shardings(
+        mesh, batch, state_ndim, per_slot_keys=per_slot_keys, cond=cond,
+    )
+    return carry, replicated(mesh)

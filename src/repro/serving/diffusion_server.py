@@ -31,6 +31,20 @@ are only ever permuted within their device's block, so no sample (or
 its PRNG key) ever crosses a shard boundary. ``refills_per_device``
 records the per-device admission counts.
 
+Device-resident hot path (DESIGN.md §12): with ``device_resident=True``
+the per-horizon polling loop itself moves on-device. A jitted driver
+(``solve_horizons``-shaped ``lax.while_loop`` with the slot carry
+*donated*) chains sync-horizon chunks until a serving event — a pending
+delivery — fires, and the host reads back exactly one scalar
+``events_pending`` flag per driver call. Only when the flag is set does
+the host pull the (B,) bookkeeping + retired rows, compute the
+compaction permutation and admissions, and apply them through a second
+jitted, donated event update (gather by permutation, masked admission
+scatter, on-device prior draws from per-request keys). Host↔device
+traffic is O(delivered requests), not O(sync horizons); delivered
+samples are bit-identical to the host-driven loop because per-slot keys
+make trajectories invariant to slot placement and sync timing.
+
 Device step = repro.launch.sample.make_sample_step (the same
 ``solve_chunk`` unit the production-mesh dry-run lowers); the host loop
 only watches t and swaps slots.
@@ -49,7 +63,8 @@ import numpy as np
 from repro.core import AdaptiveConfig
 from repro.core.precision import resolve_policy
 from repro.core.sde import SDE
-from repro.core.solvers.adaptive import SolverCarry
+from repro.core.solvers import solver_nfe_per_iteration
+from repro.core.solvers.adaptive import SolverCarry, events_pending
 
 Array = jax.Array
 
@@ -71,7 +86,8 @@ class ImageRequest:
     nfe: int = 0
     done: bool = False
     #: device iterations spent occupying a slot (admission → retirement);
-    #: 2·resident_iters − nfe is this request's frozen-passenger waste
+    #: nfe_per_iter·resident_iters − nfe is this request's
+    #: frozen-passenger waste
     resident_iters: int = 0
     _admit_iters: int = dataclasses.field(default=0, repr=False)
 
@@ -105,6 +121,21 @@ class DiffusionBatcher:
     rows, and compaction moves condition leaves with their samples —
     shard-locally, exactly like the per-slot PRNG keys — so a
     request's conditioning follows it through any slot permutation.
+
+    ``device_resident=True`` (DESIGN.md §12) replaces the per-horizon
+    host round-trip with the on-device multi-horizon driver: up to
+    ``max_horizons`` sync-horizon chunks run per host visit, the carry
+    buffers are donated to both the driver and the event update, and
+    the host reads one scalar event flag per driver call (see module
+    docstring). ``host_transfers`` counts every device→host read the
+    serve loop issues — the metric bench_device_serving.py reports.
+
+    ``solver``/``solver_kwargs`` name the solver family the
+    ``sample_step`` runs so waste accounting can convert loop
+    iterations to issued score-net evaluations via the registry's
+    ``solver_nfe_per_iteration`` (hardcoding the adaptive family's 2
+    made ``wasted_nfe_fraction`` negative for e.g. ``pc_hmc``, which
+    issues ``1 + corrector_steps·hmc_leapfrog`` per iteration).
     """
 
     def __init__(
@@ -120,6 +151,10 @@ class DiffusionBatcher:
         sync_horizon: int = 1,
         compaction: bool = True,
         policy=None,
+        device_resident: bool = False,
+        max_horizons: int = 32,
+        solver: str = "adaptive",
+        solver_kwargs: Optional[dict] = None,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
@@ -132,6 +167,14 @@ class DiffusionBatcher:
         self.mesh = mesh
         self.sync_horizon = int(sync_horizon)
         self.compaction = bool(compaction)
+        self.device_resident = bool(device_resident)
+        self.max_horizons = int(max_horizons)
+        self.solver = solver
+        #: score-net evaluations one device loop iteration issues over
+        #: the full slot batch, from the solver registry (DESIGN.md §7)
+        self.nfe_per_iter = solver_nfe_per_iteration(
+            solver, **(solver_kwargs or {})
+        )
         self.conditioner = self.cfg.conditioner
         cond_struct = (
             None if self.conditioner is None
@@ -169,15 +212,25 @@ class DiffusionBatcher:
         self.queue: Deque[ImageRequest] = deque()
         self.finished: Dict[int, ImageRequest] = {}
         self._slot_req: List[Optional[ImageRequest]] = [None] * slots
-        #: total device loop iterations executed (each costs 2 score-net
-        #: forwards over the full slot batch, busy or not)
+        #: total device loop iterations executed (each costs nfe_per_iter
+        #: score-net forwards over the full slot batch, busy or not)
         self.total_iterations = 0
         #: Σ per-request NFE actually delivered — the useful fraction of
-        #: 2 · slots · total_iterations issued evaluations
+        #: nfe_per_iter · slots · total_iterations issued evaluations
         self.useful_nfe = 0
-        #: Σ 2·resident_iters over delivered requests: evaluations issued
-        #: to *occupied* slots (excludes never-occupied idle capacity)
+        #: Σ nfe_per_iter·resident_iters over delivered requests:
+        #: evaluations issued to *occupied* slots (excludes
+        #: never-occupied idle capacity)
         self.resident_nfe = 0
+        #: device→host reads the serve loop issued (every one goes
+        #: through ``_d2h``); the device-resident path keeps this
+        #: O(delivered requests) instead of O(sync horizons)
+        self.host_transfers = 0
+        #: driver calls (device-resident) / step() chunks (host-driven)
+        self.horizon_windows = 0
+        #: host mirror of the carry's device iteration counter, so the
+        #: host-driven step() needs one read per chunk, not two
+        self._host_iters = 0
         B = slots
         zi = jnp.zeros((B,), jnp.int32)
         self._carry = SolverCarry(
@@ -194,6 +247,139 @@ class DiffusionBatcher:
                   else self.conditioner.neutral_cond(B, self.shape)),
         )
         self._carry = self._shard_carry(self._carry)
+        self._occupied = None
+        self._driver_fn = None
+        self._event_fn = None
+        if self.device_resident:
+            # donation demands distinct buffers per leaf: the fresh carry
+            # aliases its zero-init leaves (and jnp.zeros constant-caches),
+            # which XLA rejects as donating the same buffer twice
+            self._carry = jax.tree_util.tree_map(
+                lambda a: jnp.array(a, copy=True), self._carry
+            )
+            self._build_device_loop(sample_step)
+            self._set_occupied()
+
+    # ------------------------------------------------------------------
+    def _d2h(self, tree):
+        """The serve loop's single device→host seam: every read crosses
+        here (counted), so transfer accounting — and the regression test
+        pinning the device-resident path to O(events) — sees all of
+        them. One call = one logical sync, however many leaves ride in
+        the pytree."""
+        self.host_transfers += 1
+        return jax.device_get(tree)
+
+    def _h2d_vec(self, arr):
+        """Upload a (B,)-ish host array with the carry's vector
+        sharding (no-op placement without a mesh)."""
+        arr = jnp.asarray(arr)
+        if self._carry_shardings is not None:
+            arr = jax.device_put(arr, self._carry_shardings.done)
+        return arr
+
+    def _set_occupied(self) -> None:
+        """Mirror host slot occupancy into the device-side (B,) mask the
+        driver's ``events_pending`` consults (idle slots ride with
+        done=True, so the device cannot derive occupancy from the carry)."""
+        self._occupied = self._h2d_vec(
+            np.array([r is not None for r in self._slot_req])
+        )
+
+    def _build_device_loop(self, sample_step: Callable) -> None:
+        """Jit the two device-resident stages (DESIGN.md §12).
+
+        The *driver* chains sync-horizon chunks in a ``lax.while_loop``
+        until an event is pending (or ``max_horizons`` chunks ran, so a
+        straggler-bound wave still returns control), and returns the
+        carry plus the scalar event flag — the sole per-call read. The
+        *event update* applies one host decision batch entirely
+        on-device: gather every carry leaf by the compaction
+        permutation, then overwrite admitted rows with fresh prior draws
+        (vmapped over the admitted requests' own prior keys — bit-
+        identical to the host's per-key draws), reset their control
+        fields, and install their noise keys. Both donate the carry, so
+        the (B, ...) state buffers are reused in place rather than
+        copied per call. The admission inputs are fixed-shape full-B
+        buffers (mask + key rows) to keep a single trace; only the
+        *condition payload* rows are scattered host-side afterwards —
+        admission payloads stay per-request (ragged pytrees, not worth a
+        trace per admission-count), see DESIGN.md §12.
+        """
+        wait_all = not self.compaction
+
+        def driver(params, carry, occupied):
+            def cond(state):
+                c, n = state
+                running = jnp.any(
+                    jnp.logical_and(occupied, jnp.logical_not(c.done))
+                )
+                no_event = jnp.logical_not(
+                    events_pending(c, occupied, wait_all=wait_all)
+                )
+                return running & no_event & (n < self.max_horizons)
+
+            def body(state):
+                c, n = state
+                c = sample_step(params, c, max_sync_iters=self.sync_horizon)
+                return c, n + 1
+
+            carry, _ = jax.lax.while_loop(
+                cond, body, (carry, jnp.asarray(0, jnp.int32))
+            )
+            return carry, events_pending(carry, occupied, wait_all=wait_all)
+
+        def event_update(carry, perm, admit_mask, prior_keys, noise_keys):
+            def upd(leaf, admit):
+                leaf = jnp.take(leaf, perm, axis=0)
+                m = admit_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+                return jnp.where(m, admit, leaf)
+
+            priors = jax.vmap(
+                lambda k: self.sde.prior_sample(k, self.shape)
+            )(prior_keys).astype(carry.x.dtype)
+            h0 = min(self.cfg.h_init, self.sde.T - self.sde.t_eps)
+            return SolverCarry(
+                x=upd(carry.x, priors),
+                x_prev=upd(carry.x_prev, priors),
+                t=upd(carry.t, jnp.float32(self.sde.T)),
+                h=upd(carry.h, jnp.float32(h0)),
+                key=upd(carry.key, noise_keys),
+                nfe=upd(carry.nfe, 0),
+                accepted=upd(carry.accepted, 0),
+                rejected=upd(carry.rejected, 0),
+                done=upd(carry.done, False),
+                # fold-and-reset: the host adds the pulled counter to
+                # total_iterations at every event, so the device counter
+                # restarts (and cfg.max_iters never trips on a
+                # long-lived server)
+                iterations=jnp.asarray(0, jnp.int32),
+                cond=(None if carry.cond is None else
+                      jax.tree_util.tree_map(
+                          lambda l: jnp.take(l, perm, axis=0), carry.cond
+                      )),
+            )
+
+        if self._carry_shardings is not None:
+            from repro.parallel.sharding import serving_loop_shardings
+
+            cond_struct = (None if self.conditioner is None else
+                           self.conditioner.cond_struct(self.n, self.shape))
+            carry_s, flag_s = serving_loop_shardings(
+                self.mesh, self.n, 1 + len(self.shape),
+                per_slot_keys=True, cond=cond_struct,
+            )
+            self._driver_fn = jax.jit(
+                driver, donate_argnums=(1,),
+                out_shardings=(carry_s, flag_s),
+            )
+            self._event_fn = jax.jit(
+                event_update, donate_argnums=(0,),
+                out_shardings=carry_s,
+            )
+        else:
+            self._driver_fn = jax.jit(driver, donate_argnums=(1,))
+            self._event_fn = jax.jit(event_update, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def _shard_carry(self, carry: SolverCarry) -> SolverCarry:
@@ -234,8 +420,13 @@ class DiffusionBatcher:
     def wasted_nfe_fraction(self) -> float:
         """Fraction of issued score-net evaluations spent on idle or
         already-converged slots so far (0 when nothing ran yet) —
-        DESIGN.md §7 waste accounting."""
-        issued = 2 * self.n * self.total_iterations
+        DESIGN.md §7 waste accounting. Issued evaluations are
+        ``nfe_per_iter · slots · total_iterations``, with the
+        per-iteration factor taken from the solver registry for the
+        family this batcher runs (a hardcoded 2 is only right for the
+        Algorithm-1 families and e.g. went *negative* for ``pc_hmc``,
+        whose iterations each issue ``1 + corrector_steps·L``)."""
+        issued = self.nfe_per_iter * self.n * self.total_iterations
         if issued == 0:
             return 0.0
         return 1.0 - min(self.useful_nfe, issued) / issued
@@ -252,6 +443,55 @@ class DiffusionBatcher:
         return 1.0 - min(self.useful_nfe, self.resident_nfe) / self.resident_nfe
 
     # ------------------------------------------------------------------
+    def _retire(self, rows, nfe, conv_idx) -> None:
+        """Deliver the already-transferred retired rows: fill in each
+        request, move it to ``finished``, free its slot, and charge the
+        waste accounting (shared by the host-driven and device-resident
+        paths)."""
+        for row, i in zip(rows, conv_idx):
+            req = self._slot_req[i]
+            req.result = row
+            req.nfe = int(nfe[i])
+            req.done = True
+            req.resident_iters = self.total_iterations - req._admit_iters
+            self.finished[req.uid] = req
+            self.useful_nfe += int(nfe[i])
+            self.resident_nfe += self.nfe_per_iter * req.resident_iters
+            self._slot_req[i] = None
+
+    def _admit_from_queue(self):
+        """Seat queued requests in free slots (host bookkeeping only —
+        the slot-state writes are the caller's, per path). Returns the
+        admitted (slot index, request) lists."""
+        admit_pos, reqs = [], []
+        for i in range(self.n):
+            if self._slot_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                self._slot_req[i] = req
+                req._admit_iters = self.total_iterations
+                self.refills_per_device[self.slot_device(i)] += 1
+                admit_pos.append(i)
+                reqs.append(req)
+        return admit_pos, reqs
+
+    def _compaction_perm(self) -> np.ndarray:
+        """Shard-local compaction permutation: within each device's
+        contiguous slot block, pack the surviving in-flight samples to
+        the front (slots never cross a block = shard boundary). Also
+        reorders ``_slot_req`` to match. Identity when compaction is
+        off."""
+        perm = np.arange(self.n)
+        if self.compaction:
+            for d in range(self.n_devices):
+                lo = d * self.slots_per_device
+                hi = lo + self.slots_per_device
+                block = list(range(lo, hi))
+                live = [i for i in block if self._slot_req[i] is not None]
+                free = [i for i in block if self._slot_req[i] is None]
+                perm[lo:hi] = live + free
+            self._slot_req = [self._slot_req[j] for j in perm]
+        return perm
+
     def _sync(self) -> None:
         """Host sync: retire converged slots, compact, admit from queue.
 
@@ -264,7 +504,7 @@ class DiffusionBatcher:
         # the device's own convergence mask — using anything else (e.g. a
         # host-side t threshold) can disagree with the loop's active mask
         # and make retirement depend on the sync horizon
-        done = np.asarray(c.done)
+        done = self._d2h(c.done)
         occupied = [r is not None for r in self._slot_req]
         conv = [occupied[i] and bool(done[i]) for i in range(self.n)]
         if not self.compaction and occupied != conv and any(occupied):
@@ -291,34 +531,12 @@ class DiffusionBatcher:
                     lambda l: l[jnp.asarray(conv_idx)], c.cond
                 )
                 rows_j = self.conditioner.finalize_project(rows_j, cond_rows)
-            rows = np.asarray(rows_j)
-            nfe = np.asarray(c.nfe)
-            for row, i in zip(rows, conv_idx):
-                req = self._slot_req[i]
-                req.result = row
-                req.nfe = int(nfe[i])
-                req.done = True
-                req.resident_iters = self.total_iterations - req._admit_iters
-                self.finished[req.uid] = req
-                self.useful_nfe += int(nfe[i])
-                self.resident_nfe += 2 * req.resident_iters
-                self._slot_req[i] = None
+            rows, nfe = self._d2h((rows_j, c.nfe))
+            self._retire(rows, nfe, conv_idx)
 
-        # 2. shard-local compaction: within each device's contiguous slot
-        #    block, pack the surviving in-flight samples to the front.
-        #    Samples never cross a block (= shard) boundary, and each
-        #    sample's per-slot key moves with it, so trajectories are
-        #    unchanged by the permutation.
-        perm = np.arange(self.n)
-        if self.compaction:
-            for d in range(self.n_devices):
-                lo = d * self.slots_per_device
-                hi = lo + self.slots_per_device
-                block = list(range(lo, hi))
-                live = [i for i in block if self._slot_req[i] is not None]
-                free = [i for i in block if self._slot_req[i] is None]
-                perm[lo:hi] = live + free
-            self._slot_req = [self._slot_req[j] for j in perm]
+        # 2. shard-local compaction: each sample's per-slot key moves
+        #    with it, so trajectories are unchanged by the permutation.
+        perm = self._compaction_perm()
         permute = not np.array_equal(perm, np.arange(self.n))
 
         # 3. admit queued requests into freed slots: fresh prior draw at
@@ -326,19 +544,14 @@ class DiffusionBatcher:
         #    admission cannot perturb any in-flight trajectory. The
         #    request's condition payload (or the neutral one) is written
         #    into the same rows (DESIGN.md §9).
-        admit_pos, priors, noise_keys, conds = [], [], [], []
-        for i in range(self.n):
-            if self._slot_req[i] is None and self.queue:
-                req = self.queue.popleft()
-                self._slot_req[i] = req
-                req._admit_iters = self.total_iterations
-                self.refills_per_device[self.slot_device(i)] += 1
-                k_prior, k_noise = jax.random.split(jax.random.PRNGKey(req.seed))
-                admit_pos.append(i)
-                priors.append(self.sde.prior_sample(k_prior, self.shape))
-                noise_keys.append(k_noise)
-                if self.conditioner is not None:
-                    conds.append(self._request_cond(req))
+        admit_pos, reqs = self._admit_from_queue()
+        priors, noise_keys, conds = [], [], []
+        for req in reqs:
+            k_prior, k_noise = jax.random.split(jax.random.PRNGKey(req.seed))
+            priors.append(self.sde.prior_sample(k_prior, self.shape))
+            noise_keys.append(k_noise)
+            if self.conditioner is not None:
+                conds.append(self._request_cond(req))
 
         # a retired-but-unrefilled slot needs no explicit marking: the
         # device loop already left it at t ≤ t_eps with done=True, which
@@ -384,18 +597,126 @@ class DiffusionBatcher:
             iterations=jnp.asarray(0, jnp.int32),
             cond=cond_new,
         ))
+        self._host_iters = 0
+
+    # ------------------------------------------------------------------
+    def _process_events(self, deliver: bool = True) -> None:
+        """Device-resident event handler (DESIGN.md §12): one host visit
+        that retires, compacts, and admits in a single donated device
+        update.
+
+        ``deliver=False`` is the admission-only form (new submissions
+        into already-free slots — no delivery pending, so the (B,)
+        convergence bookkeeping is not pulled; only the iteration
+        counter is folded). All device→host reads go through ``_d2h``:
+        one bookkeeping pull, plus one retired-rows pull when something
+        converged — O(events), never O(horizons).
+        """
+        c = self._carry
+        if deliver:
+            done, nfe, iters = self._d2h((c.done, c.nfe, c.iterations))
+        else:
+            iters = self._d2h(c.iterations)
+            done = np.zeros(self.n, bool)
+        # fold-and-reset (cf. event_update): the device counter restarts
+        # at every host visit, so add it exactly once here
+        self.total_iterations += int(iters)
+        self._host_iters = 0
+        occupied = [r is not None for r in self._slot_req]
+        conv_idx = [i for i in range(self.n) if occupied[i] and bool(done[i])]
+        if conv_idx:
+            rows_j = c.x[jnp.asarray(conv_idx)].astype(jnp.float32)
+            if self.conditioner is not None:
+                cond_rows = jax.tree_util.tree_map(
+                    lambda l: l[jnp.asarray(conv_idx)], c.cond
+                )
+                rows_j = self.conditioner.finalize_project(rows_j, cond_rows)
+            self._retire(self._d2h(rows_j), nfe, conv_idx)
+
+        perm = self._compaction_perm()
+        permute = not np.array_equal(perm, np.arange(self.n))
+        can_admit = self.compaction or not any(
+            r is not None for r in self._slot_req
+        )
+        admit_pos, reqs = self._admit_from_queue() if can_admit else ([], [])
+        if permute or admit_pos:
+            admit_mask = np.zeros(self.n, bool)
+            admit_mask[admit_pos] = True
+            keys = [jax.random.split(jax.random.PRNGKey(r.seed)) for r in reqs]
+            kbuf = lambda rows: (
+                jnp.zeros((self.n, 2), jnp.uint32)
+                .at[jnp.asarray(admit_pos, jnp.int32)]
+                .set(jnp.stack(rows)) if admit_pos
+                else jnp.zeros((self.n, 2), jnp.uint32)
+            )
+            self._carry = self._event_fn(
+                self._carry,
+                self._h2d_vec(perm.astype(np.int32)),
+                self._h2d_vec(admit_mask),
+                kbuf([k[0] for k in keys]),  # prior keys → on-device draws
+                kbuf([k[1] for k in keys]),  # per-slot noise streams
+            )
+            if self.conditioner is not None and admit_pos:
+                # admission payloads stay per-request: the ragged cond
+                # rows are scattered outside the fixed-shape event jit
+                # (DESIGN.md §12)
+                rows = [self._request_cond(r) for r in reqs]
+                cond_admit = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls), rows[0], *rows[1:]
+                )
+                idx = jnp.asarray(admit_pos, jnp.int32)
+                self._carry = dataclasses.replace(
+                    self._carry,
+                    cond=jax.tree_util.tree_map(
+                        lambda leaf, av: leaf.at[idx].set(av.astype(leaf.dtype)),
+                        self._carry.cond, cond_admit,
+                    ),
+                )
+        elif int(iters):
+            # nothing moved, but the pulled counter was folded above —
+            # restart the device counter so it is never double-counted
+            self._carry = dataclasses.replace(
+                c, iterations=jnp.asarray(0, jnp.int32)
+            )
+        self._set_occupied()
+
+    def _device_step(self) -> int:
+        """One device-resident window: ≤ max_horizons · sync_horizon
+        iterations per host visit, one scalar event-flag read."""
+        occupied = [r is not None for r in self._slot_req]
+        if self.queue and not all(occupied) and (
+                self.compaction or not any(occupied)):
+            # admission is host knowledge (queue + occupancy): seat the
+            # newcomers before launching the driver — no slot frees up
+            # mid-driver, so there is nothing to poll for
+            self._process_events(deliver=False)
+        busy = sum(1 for r in self._slot_req if r is not None)
+        if busy == 0:
+            return 0
+        self._carry, ev = self._driver_fn(
+            self.params, self._carry, self._occupied
+        )
+        self.horizon_windows += 1
+        if bool(self._d2h(ev)):
+            self._process_events()
+        return busy
 
     def step(self) -> int:
-        """One sync horizon (≤ sync_horizon device iterations,
-        DESIGN.md §7); returns the number of busy slots entering the
-        chunk."""
+        """One serve-loop turn; returns the number of busy slots
+        entering the device work. Host-driven: one sync-horizon chunk
+        (≤ sync_horizon device iterations, DESIGN.md §7).
+        Device-resident: one driver window (DESIGN.md §12)."""
+        if self.device_resident:
+            return self._device_step()
         self._sync()
         busy = sum(1 for r in self._slot_req if r is not None)
         if busy == 0:
             return 0
-        before = int(self._carry.iterations)
         self._carry = self.step_fn(self.params, self._carry)
-        self.total_iterations += int(self._carry.iterations) - before
+        self.horizon_windows += 1
+        cur = int(self._d2h(self._carry.iterations))
+        self.total_iterations += cur - self._host_iters
+        self._host_iters = cur
         return busy
 
     def run_to_completion(self, max_steps: int = 100_000) -> Dict[int, ImageRequest]:
@@ -407,5 +728,9 @@ class DiffusionBatcher:
             if self.step() == 0 and not self.queue:
                 break
             steps += 1
-        self._sync()  # deliver stragglers
+        # deliver stragglers
+        if self.device_resident:
+            self._process_events()
+        else:
+            self._sync()
         return self.finished

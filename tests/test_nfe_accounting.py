@@ -1,0 +1,105 @@
+"""Per-iteration NFE accounting across the solver zoo (DESIGN.md §7).
+
+Serving's waste accounting converts device loop iterations into issued
+score-net evaluations. That conversion factor used to be a hardcoded 2
+(right only for the Algorithm-1 families; e.g. for ``pc_hmc`` — whose
+grid steps each issue ``1 + corrector_steps·leapfrog`` evaluations — the
+issued count undershot the *useful* count and the waste fraction went
+negative). It now comes from the registry rule each solver declares at
+registration. These tests pin the rules against the solvers' own
+measured NFE counters, family by family.
+"""
+
+import jax
+import pytest
+
+from repro.core import VESDE, VPSDE, sample
+from repro.core.analytic import gaussian_score
+from repro.core.solvers import base as solvers_base
+from repro.core.solvers import solver_nfe_per_iteration
+
+B, D = 16, 8
+
+
+# name → (sampling kwargs, registry-rule kwargs). Zoo configurations
+# (analysis/solver_select.ZOO), shrunk where cost is config-independent.
+CASES = {
+    "em": (dict(n_steps=50), {}),
+    "ddim": (dict(n_steps=25), {}),
+    "adaptive": (dict(eps_rel=0.05), {}),
+    "momentum": (dict(eps_rel=0.05, momentum=0.15), {}),
+    "heun": (dict(eps_rel=0.05, probability_flow=True), {}),
+    "ode": ({}, {}),
+    "pc": (dict(n_steps=30, corrector_steps=2),
+           dict(corrector_steps=2)),
+    "pc_hmc": (dict(n_steps=30, corrector_steps=1, hmc_leapfrog=3),
+               dict(corrector_steps=1, hmc_leapfrog=3)),
+}
+
+
+@pytest.mark.parametrize("method", list(CASES), ids=list(CASES))
+def test_registry_rule_matches_measured_nfe(method, rng):
+    """per-iteration rule · iterations == the solver's own issued-NFE
+    counter. ``denoise=False`` so the one-off Tweedie evaluation does not
+    blur the per-iteration factor; for the adaptive carry families the
+    per-sample identity nfe_i = rule·(accepted_i + rejected_i) must hold
+    sample-by-sample (iterations only bound the *slowest* sample)."""
+    kwargs, rule_kwargs = CASES[method]
+    per_iter = solver_nfe_per_iteration(method, **rule_kwargs)
+    sde = VPSDE()
+    res = jax.jit(
+        lambda k: sample(sde, gaussian_score(sde), (B, D), k,
+                         method=method, denoise=False, **kwargs)
+    )(rng)
+    if method in ("adaptive", "momentum", "heun"):
+        import numpy as np
+
+        np.testing.assert_array_equal(
+            np.asarray(res.nfe),
+            per_iter * np.asarray(res.accepted + res.rejected))
+        assert int((res.accepted + res.rejected).max()) <= int(res.iterations)
+    else:
+        assert int(res.nfe.min()) == int(res.nfe.max())  # fixed cost
+        # rk45 seeds its FSAL k1 with one evaluation before the loop —
+        # a one-off like the Tweedie eval, outside the per-iteration rate
+        seed_evals = 1 if method == "ode" else 0
+        assert int(res.nfe[0]) == per_iter * int(res.iterations) + seed_evals
+
+
+def test_rule_values_track_configuration():
+    """The callable rules scale with their cost-relevant kwargs."""
+    assert solver_nfe_per_iteration("em") == 1
+    assert solver_nfe_per_iteration("ddim") == 1
+    assert solver_nfe_per_iteration("adaptive") == 2
+    assert solver_nfe_per_iteration("ode") == 6
+    # pc: 1 predictor + corrector_steps Langevin evaluations
+    assert solver_nfe_per_iteration("pc") == 2
+    assert solver_nfe_per_iteration("pc", corrector_steps=3) == 4
+    # hmc correctors pay leapfrog evaluations per corrector pass
+    assert solver_nfe_per_iteration("pc_hmc") == \
+        solver_nfe_per_iteration("pc", corrector="hmc")
+    assert solver_nfe_per_iteration(
+        "pc_hmc", corrector_steps=2, hmc_leapfrog=5) == 11
+    # cost-irrelevant kwargs (the solver's full signature) are ignored
+    assert solver_nfe_per_iteration("em", n_steps=999) == 1
+
+
+def test_unknown_or_undeclared_solver_raises(monkeypatch):
+    """Accounting must never silently fall back to a wrong constant."""
+    with pytest.raises(ValueError, match="unknown solver"):
+        solver_nfe_per_iteration("not_a_solver")
+    monkeypatch.setitem(solvers_base._REGISTRY, "_norule", lambda: None)
+    with pytest.raises(ValueError, match="no per-iteration NFE rule"):
+        solver_nfe_per_iteration("_norule")
+
+
+def test_ve_fixed_grid_accounting(rng):
+    """The rule is SDE-independent: same identity under VESDE."""
+    sde = VESDE(sigma_max=10.0)
+    res = jax.jit(
+        lambda k: sample(sde, gaussian_score(sde), (B, D), k,
+                         method="pc", n_steps=20, corrector_steps=2,
+                         denoise=False)
+    )(rng)
+    per_iter = solver_nfe_per_iteration("pc", corrector_steps=2)
+    assert int(res.nfe[0]) == per_iter * int(res.iterations)

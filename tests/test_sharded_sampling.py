@@ -173,3 +173,15 @@ def test_selftest_batcher_per_device_refill(selftest_results):
     # per-slot keys: identical per-request samples for sharded horizon-4
     # vs unsharded horizon-1 serving (shard-local compaction is invisible)
     assert b["scheduling_invariant"], b
+
+
+@pytest.mark.slow
+def test_selftest_device_resident_serving(selftest_results):
+    """Device-resident serving on a real multi-device mesh (DESIGN.md
+    §12): bit-identical deliveries and accounting vs the host-driven
+    sharded loop, with strictly less device→host traffic."""
+    dr = selftest_results["device_resident"]
+    assert dr["all_completed"] and dr["bitwise_equal"], dr
+    assert dr["iterations_equal"], dr
+    assert dr["transfers_reduced"], dr
+    assert dr["resident_transfers"] < dr["host_transfers"]
