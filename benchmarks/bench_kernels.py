@@ -1,5 +1,6 @@
 """Kernel micro-benchmarks: fused solver step vs. unfused jnp, flash vs.
-reference attention, chunked SSD vs. sequential scan.
+reference attention, fused GroupNorm→SiLU vs. the jnp chain, chunked
+SSD vs. sequential scan.
 
 CPU wall-times here validate plumbing only (the TPU picture comes from
 the dry-run roofline); the derived column carries the modeled HBM-pass
@@ -13,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.groupnorm_silu import ops as gs_ops
+from repro.kernels.groupnorm_silu import ref as gs_ref
 from repro.kernels.solver_step import ops as ss_ops
 from repro.kernels.solver_step import ref as ss_ref
 from repro.kernels.ssd import ref as ssd_ref
@@ -48,6 +51,21 @@ def main() -> None:
     emit("kernels/flash_attention/pallas-interpret", us_f,
          "vmem_tiles=128x128")
     emit("kernels/flash_attention/jnp-ref", us_r, "materializes_SxS=1")
+
+    # --- fused GroupNorm→SiLU (B=64, H=32, C=128: traj bottleneck) -------
+    Bg, Hg, Cg, G = 64, 32, 128, 8
+    kg = jax.random.split(jax.random.PRNGKey(7), 3)
+    xg = jax.random.normal(kg[0], (Bg, Hg, Cg))
+    sc = 1.0 + 0.1 * jax.random.normal(kg[1], (Cg,))
+    bi = 0.1 * jax.random.normal(kg[2], (Cg,))
+    fusedg = jax.jit(lambda x, s, b: gs_ops.groupnorm_silu(x, s, b, groups=G))
+    unfg = jax.jit(lambda x, s, b: gs_ref.groupnorm_silu(x, s, b, groups=G))
+    us_f, _ = timed(fusedg, xg, sc, bi, repeats=5)
+    us_u, _ = timed(unfg, xg, sc, bi, repeats=5)
+    # unfused chain: read for stats, read for normalize, write norm,
+    # read+write SiLU; fused: one read, one write.
+    emit("kernels/groupnorm_silu/fused", us_f, "hbm_passes=2")
+    emit("kernels/groupnorm_silu/jnp", us_u, "hbm_passes=5")
 
     # --- SSD (S=2048) ------------------------------------------------------
     Bm, S, H, P, G, N = 2, 2048, 4, 64, 1, 64

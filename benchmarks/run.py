@@ -18,6 +18,7 @@ from . import (
     bench_kernels,
     bench_planning,
     bench_precision,
+    bench_score_eval,
     bench_serving,
     bench_sharded_sampling,
     bench_solver_zoo,
@@ -42,6 +43,7 @@ SUITES = {
     "guidance": bench_guidance.main,       # conditioning NFE overhead
     "planning": bench_planning.main,       # trajectory workload + planner loop
     "solver_zoo": bench_solver_zoo.main,   # zoo race + auto-selection report
+    "score_eval": bench_score_eval.main,   # per-NFE hot-path roofline
 }
 
 

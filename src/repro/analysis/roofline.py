@@ -35,6 +35,9 @@ LINK_BW = 50e9            # bytes/s per ICI link
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                           "experiments", "dryrun")
+SCORE_EVAL_ARTIFACT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..",
+    "experiments", "score_eval", "BENCH_score_eval.json")
 
 
 def _param_counts(cfg) -> Dict[str, float]:
@@ -124,11 +127,61 @@ def load_all(mesh: str = "1pod") -> Dict[str, dict]:
     return out
 
 
+def score_eval_markdown(artifact: Optional[dict] = None) -> str:
+    """Roofline join for the score-eval bench (DESIGN.md §13).
+
+    Each row of ``experiments/score_eval/BENCH_score_eval.json`` carries
+    the per-NFE model FLOPs/bytes (baseline-path AOT cost analysis) and
+    the measured per-NFE wall time; this join divides by the TPU v5e
+    peaks to classify each score eval as compute- or memory-bound and —
+    when the record came from an accelerator — reports achieved FLOP/s
+    as a fraction of peak. CPU records keep the bound classification
+    (it depends only on the model cost) but their ``achieved`` column
+    reflects interpreter-mode wall time, flagged in the footer.
+    """
+    if artifact is None:
+        with open(SCORE_EVAL_ARTIFACT) as f:
+            artifact = json.load(f)
+    header = ("workload", "preset", "variant", "us/NFE", "GFLOP/NFE",
+              "t_compute_s", "t_memory_s", "bound", "achieved_GFLOP/s",
+              "frac_peak")
+    lines = ["| " + " | ".join(header) + " |", "|" + "---|" * len(header)]
+    for r in artifact["rows"]:
+        flops = float(r.get("flops_per_nfe") or 0.0)
+        byts = float(r.get("bytes_per_nfe") or 0.0)
+        t_c = flops / PEAK_FLOPS
+        t_m = byts / HBM_BW
+        bound = "compute" if t_c >= t_m else "memory"
+        us = float(r["us_per_call"])
+        achieved = flops / (us * 1e-6) if us else 0.0
+        lines.append("| " + " | ".join((
+            r["workload"], r["preset"], r["variant"], f"{us:.1f}",
+            f"{flops / 1e9:.2f}", f"{t_c:.3e}", f"{t_m:.3e}", bound,
+            f"{achieved / 1e9:.2f}", f"{achieved / PEAK_FLOPS:.2e}",
+        )) + " |")
+    backend = artifact.get("backend", "?")
+    lines.append("")
+    lines.append(
+        f"_backend: {backend}; peaks: TPU v5e "
+        f"{PEAK_FLOPS / 1e12:.0f} TFLOP/s bf16, {HBM_BW / 1e9:.0f} GB/s HBM._"
+        + (" _CPU interpreter-mode wall times — achieved/frac_peak are "
+           "plumbing-validation numbers, not hardware measurements._"
+           if backend == "cpu" else ""))
+    return "\n".join(lines)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="1pod", choices=["1pod", "2pod"])
     ap.add_argument("--md", action="store_true", help="markdown table")
+    ap.add_argument("--score-eval", action="store_true",
+                    help="print the score-eval per-NFE roofline join "
+                         "(reads experiments/score_eval/)")
     args = ap.parse_args()
+
+    if args.score_eval:
+        print(score_eval_markdown())
+        return
 
     recs = load_all(args.mesh)
     if not recs:

@@ -1,0 +1,11 @@
+"""Fused GroupNorm→SiLU Pallas kernel family (DESIGN.md §13).
+
+Same layout as ``kernels/solver_step``: ``kernel.py`` is the Pallas TPU
+kernel, ``ops.py`` the shape-handling public wrapper (CPU interpreter
+fallback included), ``ref.py`` the pure-jnp oracle the parity tests
+compare against.
+"""
+
+from . import kernel, ops, ref  # noqa: F401
+
+from .ops import groupnorm_silu  # noqa: F401

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused GroupNorm → SiLU over (B, H, C) activations.
+
+Why a kernel: the temporal UNet's residual blocks (DESIGN.md §10) run
+GroupNorm→SiLU twice per block, and left to XLA the chain streams the
+activation HBM→VMEM four times (read for the mean/var reduction, read
+for the normalize, write the norm, read+write for the SiLU — the
+cross-axis group reduction splits the fusion the same way the solver
+step's error reduction does, §2). One sample's (H, C) slab is tiny
+(≤ 32×128 for every trajectory shape), so the whole per-sample
+statistics + normalize + activation chain fits in VMEM: one HBM read,
+one HBM write.
+
+Tiling: grid = (B/bb,); each program holds a (bb, H, C) block. Group
+statistics are per (sample, group) — reductions over H (sublanes) use
+the VPU, and the C-lane → group-lane reduction goes through the MXU as
+a matmul with the one-hot group-membership matrix ``m`` (C, g): lane
+reshapes are not TPU-native, matmuls are. The inverse map (broadcast
+group stats back to their C lanes) is the transposed contraction of the
+same matrix.
+
+Precision (DESIGN.md §8): operands may be bf16 — the tile is upcast to
+fp32 in-register, statistics use the two-pass form (mean first, then
+mean of squared deviations — no E[x²]−μ² cancellation), scale/bias
+apply in fp32, SiLU runs in fp32, and ONE rounding happens at the
+store. The jnp reference path rounds twice (GroupNorm output, then
+SiLU); the oracle in ``ref.py`` mirrors the kernel's single-rounding
+contract and the parity tests hold the unfused chain to bf16 tolerance
+against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# batch rows per grid program; (H, C) ride whole — per-sample statistics
+# need the full slab, and every temporal-UNet shape fits VMEM with room
+# to spare.
+DEFAULT_BLOCK_B = 8
+
+
+def _gn_silu_kernel(x_ref, s_ref, b_ref, m_ref, o_ref, *, eps: float,
+                    inv_n: float):
+    x = x_ref[...].astype(jnp.float32)       # (bb, H, C)
+    m = m_ref[...]                           # (C, g) fp32 one-hot
+
+    # mean per (sample, group): VPU sum over H, MXU fold C → g
+    sum_h = jnp.sum(x, axis=1)               # (bb, C)
+    mu_g = jax.lax.dot_general(
+        sum_h, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * inv_n                                # (bb, g)
+    # broadcast group means back onto their C lanes (contract m's g axis)
+    mu = jax.lax.dot_general(
+        mu_g, m, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # (bb, C)
+
+    # two-pass variance: mean of squared deviations (matches jnp.var's
+    # numerics; no large-offset cancellation)
+    d = x - mu[:, None, :]                   # (bb, H, C)
+    ssq_h = jnp.sum(d * d, axis=1)           # (bb, C)
+    var_g = jax.lax.dot_general(
+        ssq_h, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * inv_n                                # (bb, g)
+    rstd = jax.lax.dot_general(
+        jax.lax.rsqrt(var_g + eps), m, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (bb, C)
+
+    y = d * rstd[:, None, :] * s_ref[...] + b_ref[...]  # (1, C) broadcasts
+    o_ref[...] = (y * jax.nn.sigmoid(y)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_b", "interpret")
+)
+def groupnorm_silu(
+    x: Array,
+    scale: Array,
+    bias: Array,
+    member: Array,
+    *,
+    eps: float = 1e-6,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+) -> Array:
+    """silu(groupnorm(x)) in one HBM pass.
+
+    x (B, H, C); scale/bias (1, C) fp32; member (C, g) fp32 one-hot
+    group membership (column j is 1 on group j's lanes). Statistics are
+    per (sample, group) over the (H, C/g) slab — ``inv_n`` below is the
+    exact reciprocal element count. Output is in x's dtype; all
+    intermediate math is fp32 (DESIGN.md §8 norm rule).
+    """
+    B, H, C = x.shape
+    g = member.shape[1]
+    bb = min(block_b, B)
+    inv_n = 1.0 / (H * (C // g))
+    grid = (pl.cdiv(B, bb),)
+    return pl.pallas_call(
+        functools.partial(_gn_silu_kernel, eps=float(eps), inv_n=inv_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, H, C), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((C, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, H, C), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, C), x.dtype),
+        interpret=interpret,
+    )(x, scale, bias, member)

@@ -1,0 +1,58 @@
+"""Public wrapper for the fused GroupNorm→SiLU kernel.
+
+Resolves the group count the way the temporal UNet's ``_groupnorm``
+does (``g = min(groups, C)``), builds the one-hot group-membership
+matrix the kernel's MXU lane→group reduction consumes, upcasts the
+affine params to fp32 (norm math is fp32 under every precision preset,
+DESIGN.md §8), and dispatches with ``interpret=True`` on CPU so the
+same code path is exercised everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+Array = jax.Array
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def groupnorm_silu(
+    x: Array,
+    scale: Array,
+    bias: Array,
+    *,
+    groups: int,
+    eps: float = 1e-6,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> Array:
+    """silu(groupnorm(x, scale, bias)) fused; x (B, H, C) → (B, H, C).
+
+    ``scale``/``bias`` are (C,) and may be any float dtype (a precision
+    policy stores bf16 copies) — they apply in fp32 either way. Output
+    is in x's dtype, rounded once.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    B, H, C = x.shape
+    g = min(groups, C)
+    if C % g:
+        raise ValueError(f"channels {C} not divisible by groups {g}")
+    # one-hot membership: lane c belongs to group c // (C/g)
+    member = (
+        jnp.arange(C)[:, None] // (C // g) == jnp.arange(g)[None, :]
+    ).astype(jnp.float32)
+    return _k.groupnorm_silu(
+        x,
+        scale.astype(jnp.float32).reshape(1, C),
+        bias.astype(jnp.float32).reshape(1, C),
+        member,
+        eps=float(eps),
+        block_b=block_b,
+        interpret=interpret,
+    )

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused GroupNorm→SiLU kernel.
+
+x (B, H, C); scale/bias (C,). Statistics are per (sample, group) over
+the (H, C/g) slab with g = min(groups, C), exactly the temporal UNet's
+``_groupnorm`` contract (DESIGN.md §10).
+
+Precision contract (mirrors the kernel, DESIGN.md §8): operands may be
+bf16; the statistics, normalize, affine, and SiLU all run in fp32 and
+the output rounds ONCE to the operand dtype. For fp32 operands every
+cast is a no-op, which makes the oracle bit-comparable to the unfused
+``silu(_groupnorm(...))`` chain there (same jnp reductions, same order).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def groupnorm_silu(x: Array, scale: Array, bias: Array, *, groups: int,
+                   eps: float = 1e-6) -> Array:
+    B, H, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(B, H, C)
+    y = xn * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return (y * jax.nn.sigmoid(y)).astype(x.dtype)

@@ -19,7 +19,8 @@ headline economy on the third workload.
   PYTHONPATH=src python -m repro.launch.plan [--env ou|pointmass]
       [--envs 6] [--steps 4] [--slots 4] [--sync-horizon 4]
       [--horizon 8] [--cfg-scale 1.5] [--precision fp32] [--unet]
-      [--compare-em 200] [--no-compaction]
+      [--unet-attention] [--fused-norm] [--compare-em 200]
+      [--no-compaction]
 
 ``launch/serve --plan`` exposes the same loop through the serving CLI.
 """
@@ -43,10 +44,14 @@ MU, S0 = 0.3, 0.5
 RETURNS_BINS = 5
 
 
-def _make_forward(pcfg: PlannerConfig, unet: bool, precision: str):
+def _make_forward(pcfg: PlannerConfig, unet: bool, precision: str,
+                  attention: bool = False, fused_norm: bool = False):
     """Noise-prediction ``forward_fn(params, x, t, y=None)`` + params:
     analytic returns-binned Gaussian (default) or a train-free
-    ``temporal_unet`` (DESIGN.md §10)."""
+    ``temporal_unet`` (DESIGN.md §10). ``attention`` adds the
+    bottleneck flash-attention block and ``fused_norm`` the fused
+    GroupNorm→SiLU kernel — the §13 hot-path levers, flags so the
+    serving loop can A/B them in place."""
     sde = VPSDE()
     policy = resolve_policy(precision)
     if not unet:
@@ -61,6 +66,8 @@ def _make_forward(pcfg: PlannerConfig, unet: bool, precision: str):
         horizon=pcfg.horizon, transition_dim=pcfg.transition_dim,
         base=16, mults=(1, 2), t_dim=32, groups=4,
         returns_bins=RETURNS_BINS if pcfg.guidance_scale else 0,
+        attention=attention, use_flash=attention,
+        use_fused_norm=fused_norm,
     )
     params = policy.cast_params(
         init_temporal_unet(ucfg, jax.random.PRNGKey(0)))
@@ -75,7 +82,8 @@ def serve_planning(
     *, env_name: str = "ou", envs: int = 6, steps: int = 4,
     slots: int = 4, sync_horizon: int = 4, compaction: bool = True,
     horizon: int = 8, cfg_scale: float = 0.0, precision: str = "fp32",
-    unet: bool = False,
+    unet: bool = False, unet_attention: bool = False,
+    fused_norm: bool = False,
 ) -> dict:
     """Closed-loop planning as a service (DESIGN.md §10): drain
     ``envs × steps`` plan requests through the batcher, executing each
@@ -84,7 +92,9 @@ def serve_planning(
     env = get_env(env_name)
     pcfg = PlannerConfig(horizon=horizon, obs_dim=env.obs_dim,
                          act_dim=env.act_dim, guidance_scale=cfg_scale)
-    sde, fwd, params = _make_forward(pcfg, unet, precision)
+    sde, fwd, params = _make_forward(pcfg, unet, precision,
+                                     attention=unet_attention,
+                                     fused_norm=fused_norm)
     rh = RecedingHorizonPlanner(
         sde, fwd, params, pcfg, env,
         cfg=AdaptiveConfig(eps_rel=0.05, precision=precision),
@@ -168,6 +178,13 @@ def main() -> None:
     ap.add_argument("--unet", action="store_true",
                     help="train-free temporal UNet instead of the "
                          "analytic score")
+    ap.add_argument("--unet-attention", action="store_true",
+                    help="with --unet: bottleneck self-attention block "
+                         "routed through the flash kernel (DESIGN.md "
+                         "§13; fresh block is the identity)")
+    ap.add_argument("--fused-norm", action="store_true",
+                    help="with --unet: fused GroupNorm→SiLU Pallas "
+                         "kernel in every residual block (DESIGN.md §13)")
     ap.add_argument("--compare-em", type=int, default=None, metavar="N",
                     help="also print adaptive vs EM-N NFE on the "
                          "trajectory shape")
@@ -177,6 +194,7 @@ def main() -> None:
         slots=args.slots, sync_horizon=args.sync_horizon,
         compaction=not args.no_compaction, horizon=args.horizon,
         cfg_scale=args.cfg_scale, precision=args.precision, unet=args.unet,
+        unet_attention=args.unet_attention, fused_norm=args.fused_norm,
     )
     if args.compare_em is not None:
         compare_em(horizon=args.horizon, em_steps=args.compare_em)

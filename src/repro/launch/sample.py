@@ -381,9 +381,9 @@ def dryrun_loop(batch: int = 256, precision: str = "fp32") -> dict:
     return rec
 
 
-def demo(precision: str = "fp32") -> None:
+def demo(precision: str = "fp32", flash: bool = False) -> None:
     net = DiTConfig(image_size=16, patch=4, d_model=96, num_layers=2,
-                    num_heads=4, d_ff=256)
+                    num_heads=4, d_ff=256, use_flash=flash)
     sde = VPSDE()
     key = jax.random.PRNGKey(0)
     policy = resolve_policy(precision)
@@ -476,6 +476,10 @@ def main() -> None:
     ap.add_argument("--inpaint", action="store_true",
                     help="demo checkerboard-mask inpainting "
                          "(post-accept projection, DESIGN.md §9)")
+    ap.add_argument("--flash", action="store_true",
+                    help="route the demo DiT's attention through the "
+                         "Pallas flash kernel (DESIGN.md §13; "
+                         "interpreter mode on CPU)")
     args = ap.parse_args()
     if args.dryrun:
         dryrun(args.multi_pod, args.batch, pipeline=args.pipeline,
@@ -487,7 +491,7 @@ def main() -> None:
     elif args.inpaint:
         demo_inpaint(precision=args.precision)
     else:
-        demo(precision=args.precision)
+        demo(precision=args.precision, flash=args.flash)
 
 
 if __name__ == "__main__":

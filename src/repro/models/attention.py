@@ -67,7 +67,11 @@ def _softcap(logits: Array, cap: float) -> Array:
 
 
 def _ref_attention(q, k, v, *, causal: bool, window: Optional[int], softcap: float):
-    """(B,S,H,D)x(B,Sk,Kv,D) GQA attention, fp32 softmax."""
+    """(B,S,H,D)x(B,Sk,Kv,D) GQA attention, fp32 softmax.
+
+    Internal: callers outside this module go through :func:`attention`,
+    the single owner of the flash/softcap/window dispatch.
+    """
     B, S, H, D = q.shape
     Kv = k.shape[2]
     group = H // Kv
@@ -91,6 +95,61 @@ def _ref_attention(q, k, v, *, causal: bool, window: Optional[int], softcap: flo
     return out.astype(q.dtype)
 
 
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    use_flash: bool = False,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Projected-head attention, (B, S, H, D) × (B, Sk, Kv, D) → (B, S, H, D).
+
+    The single owner of the flash/softcap/window dispatch (DESIGN.md
+    §13): every score network and the LM blocks route their attention
+    here, so the two implementations — the jnp reference and the Pallas
+    flash kernel (``repro.kernels.flash_attention``) — stay behind one
+    seam. With ``use_flash`` the online-softmax kernel runs with fp32
+    softmax accumulators regardless of the operand dtype (bf16 under a
+    precision policy, DESIGN.md §8); the reference path upcasts to fp32
+    the same way, so the two agree to fp32-accumulation tolerance and
+    ``use_flash=False`` is bit-identical to the historical reference
+    path.
+
+    ``softcap > 0`` (gemma-style logit soft-capping) has no kernel
+    implementation and always takes the reference path — callers get
+    the fallback from this one place instead of re-implementing the
+    predicate. The flash path requires self-attention shapes
+    (``q.shape[1] == k.shape[1]``); sequence lengths that are not a
+    multiple of the q-block are zero-padded and sliced by the kernel
+    wrapper (``kernels.flash_attention.ops``).
+    """
+    if use_flash and not softcap and q.shape[1] == k.shape[1]:
+        from repro.kernels.flash_attention import ops as fa
+
+        kw = {}
+        if block_q is not None:
+            kw["block_q"] = block_q
+        if block_k is not None:
+            kw["block_k"] = block_k
+        out = fa.attention(
+            jnp.transpose(q, (0, 2, 1, 3)),
+            jnp.transpose(k, (0, 2, 1, 3)),
+            jnp.transpose(v, (0, 2, 1, 3)),
+            causal=causal,
+            window=window,
+            interpret=interpret,
+            **kw,
+        )
+        return jnp.transpose(out, (0, 2, 1, 3))
+    return _ref_attention(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
 def attention_forward(
     params: dict,
     x: Array,
@@ -105,7 +164,7 @@ def attention_forward(
     if kind == "X":
         assert cross_kv is not None
         q, k, v = _project_qkv(params, x, cross_kv, cfg)
-        out = _ref_attention(
+        out = attention(
             q, k, v, causal=False, window=None, softcap=cfg.attn_logit_softcap
         )
     else:
@@ -123,21 +182,10 @@ def attention_forward(
                 q, P(U, cfg.attn_q_seq_shard, U, U)
             )
         window = cfg.sliding_window if kind == "L" else None
-        if use_flash and not cfg.attn_logit_softcap:
-            from repro.kernels.flash_attention import ops as fa
-
-            out = fa.attention(
-                jnp.transpose(q, (0, 2, 1, 3)),
-                jnp.transpose(k, (0, 2, 1, 3)),
-                jnp.transpose(v, (0, 2, 1, 3)),
-                causal=True,
-                window=window,
-            )
-            out = jnp.transpose(out, (0, 2, 1, 3))
-        else:
-            out = _ref_attention(
-                q, k, v, causal=True, window=window, softcap=cfg.attn_logit_softcap
-            )
+        out = attention(
+            q, k, v, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap, use_flash=use_flash,
+        )
     return jnp.einsum("bshd,hde->bse", out, params["wo"])
 
 

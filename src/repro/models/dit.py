@@ -26,7 +26,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import _ref_attention, init_attention
+from repro.models.attention import attention, init_attention
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_mlp,
@@ -56,6 +56,12 @@ class DiTConfig:
     #: 0 (the default) leaves params and forward bit-identical to the
     #: unconditional net.
     num_classes: int = 0
+    #: route the block attention through the Pallas flash kernel
+    #: (DESIGN.md §13). ``False`` (the default) is bit-identical to the
+    #: reference-attention stack; ``True`` agrees to fp32-accumulation
+    #: tolerance per precision preset (gated by
+    #: ``tests/test_score_hotpath.py``).
+    use_flash: bool = False
 
     @property
     def tokens(self) -> int:
@@ -175,7 +181,8 @@ def dit_forward(params: Dict[str, Any], x: Array, t: Array, cfg: DiTConfig,
         q = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wq"])
         k = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wk"])
         v = jnp.einsum("bse,ehd->bshd", hn, lp["attn"]["wv"])
-        att = _ref_attention(q, k, v, causal=False, window=None, softcap=0.0)
+        att = attention(q, k, v, causal=False, window=None, softcap=0.0,
+                        use_flash=cfg.use_flash)
         h = h + g1 * jnp.einsum("bshd,hde->bse", att, lp["attn"]["wo"])
         hn = apply_norm(lp["norm2"], h, "layernorm_np") * (1 + s2) + b2
         h = h + g2 * apply_mlp(lp["mlp"], hn, "silu", True)

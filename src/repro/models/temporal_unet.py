@@ -24,6 +24,14 @@ Precision (DESIGN.md §8): both the forward and the adapter accept
 compute in fp32 from the stored weights, GroupNorm upcasts internally,
 and ``make_score_fn`` does the 1/std rescale in fp32 — the same seams
 as the image nets.
+
+Hot path (DESIGN.md §13): ``attention=True`` adds a bottleneck
+self-attention block over the horizon axis (zero-init output
+projection → bitwise-neutral when fresh; ``use_flash`` routes it
+through the Pallas flash kernel), and ``use_fused_norm=True`` runs
+every residual block's GroupNorm→SiLU through the fused Pallas kernel
+(``repro.kernels.groupnorm_silu``). All three flags default off, and
+the off-state is bit-identical to the pre-flag stack.
 """
 
 from __future__ import annotations
@@ -60,6 +68,23 @@ class TemporalUNetConfig:
     #: row; 0 (the default) leaves params and forward identical to the
     #: unconditional net.
     returns_bins: int = 0
+    #: add a self-attention block at the bottleneck (DESIGN.md §13):
+    #: the horizon axis gets a global receptive field on top of the
+    #: conv stack's ~kernel·depth one. The output projection is
+    #: ZERO-INIT, so a freshly-added block is bitwise-neutral — and
+    #: ``False`` (the default) keeps params and forward bit-identical
+    #: to the conv-only net.
+    attention: bool = False
+    attn_heads: int = 4
+    #: run the bottleneck attention through the Pallas flash kernel
+    #: (via the public ``repro.models.attention.attention`` owner);
+    #: ``False`` takes the jnp reference path bit-identically.
+    use_flash: bool = False
+    #: run each residual block's GroupNorm→SiLU through the fused
+    #: Pallas kernel (``repro.kernels.groupnorm_silu``, DESIGN.md §13).
+    #: ``False`` (the default) is the historical unfused jnp chain,
+    #: bit-identical to the pre-kernel stack under fp32.
+    use_fused_norm: bool = False
 
     def __post_init__(self):
         down = 2 ** (len(self.mults) - 1)
@@ -68,6 +93,13 @@ class TemporalUNetConfig:
                 f"horizon {self.horizon} must divide {down} "
                 f"(one stride-2 downsample per extra mult)"
             )
+        if self.attention:
+            cmid = self.base * self.mults[-1]
+            if cmid % self.attn_heads:
+                raise ValueError(
+                    f"bottleneck width {cmid} must divide attn_heads "
+                    f"{self.attn_heads}"
+                )
 
 
 def _conv_init(key, k, cin, cout, dtype=jnp.float32):
@@ -83,13 +115,38 @@ def _conv(x, w, stride=1):
 
 
 def _groupnorm(x: Array, scale: Array, bias: Array, groups: int) -> Array:
+    """GroupNorm over (sample, group) slabs, fp32 math, rounded ONCE.
+
+    DESIGN.md §8 norm rule, audited for the bf16 presets: the input is
+    upcast to fp32 *before* the mean/var reductions (group statistics
+    in bf16 would lose the variance to cancellation at any nonzero
+    offset — ``tests/test_score_hotpath.py`` pins this with a
+    large-offset regression), the affine params are explicitly upcast
+    (a precision policy hands this bf16 copies; fp32 promotion rules
+    would hide the cast, the explicit form documents it), and the
+    single rounding to x's dtype is the final ``astype``.
+    """
     B, H, C = x.shape
     g = min(groups, C)
     xg = x.reshape(B, H, g, C // g).astype(jnp.float32)
     mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
     var = jnp.var(xg, axis=(1, 3), keepdims=True)
     xg = (xg - mu) * jax.lax.rsqrt(var + 1e-6)
-    return (xg.reshape(B, H, C) * scale + bias).astype(x.dtype)
+    out = (xg.reshape(B, H, C) * scale.astype(jnp.float32)
+           + bias.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _gn_silu(x: Array, scale: Array, bias: Array, groups: int,
+             fused: bool) -> Array:
+    """GroupNorm→SiLU, fused (one HBM pass, one rounding) or the
+    historical unfused jnp chain (DESIGN.md §13). ``fused=False`` is
+    bit-identical to the pre-kernel stack."""
+    if fused:
+        from repro.kernels.groupnorm_silu import ops as gs
+
+        return gs.groupnorm_silu(x, scale, bias, groups=groups)
+    return jax.nn.silu(_groupnorm(x, scale, bias, groups))
 
 
 def _init_resblock(key, k, cin, cout, t_dim):
@@ -107,14 +164,35 @@ def _init_resblock(key, k, cin, cout, t_dim):
     return p
 
 
-def _resblock(p, x, temb, groups):
-    h = jax.nn.silu(_groupnorm(x, p["gn1_s"], p["gn1_b"], groups))
+def _resblock(p, x, temb, groups, fused=False):
+    h = _gn_silu(x, p["gn1_s"], p["gn1_b"], groups, fused)
     h = _conv(h, p["conv1"])
     h = h + (jax.nn.silu(temb) @ p["temb_w"] + p["temb_b"])[:, None, :]
-    h = jax.nn.silu(_groupnorm(h, p["gn2_s"], p["gn2_b"], groups))
+    h = _gn_silu(h, p["gn2_s"], p["gn2_b"], groups, fused)
     h = _conv(h, p["conv2"])
     skip = _conv(x, p["skip"]) if "skip" in p else x
     return skip + h
+
+
+def _attn_block(p, x, cfg):
+    """Bottleneck self-attention over the horizon axis (DESIGN.md §13).
+
+    Pre-norm GroupNorm (norm math fp32, §8), per-head qkv projection,
+    non-causal attention through the public
+    :func:`repro.models.attention.attention` owner (flash kernel when
+    ``cfg.use_flash``), zero-init output projection — so a
+    freshly-initialized block is the identity, bitwise, and the
+    ``attention=False`` ↔ fresh-``attention=True`` guardrail holds.
+    """
+    from repro.models.attention import attention
+
+    hn = _groupnorm(x, p["gn_s"], p["gn_b"], cfg.groups)
+    q = jnp.einsum("bsc,chd->bshd", hn, p["wq"])
+    k = jnp.einsum("bsc,chd->bshd", hn, p["wk"])
+    v = jnp.einsum("bsc,chd->bshd", hn, p["wv"])
+    att = attention(q, k, v, causal=False, window=None, softcap=0.0,
+                    use_flash=cfg.use_flash)
+    return x + jnp.einsum("bshd,hdc->bsc", att, p["wo"])
 
 
 def init_temporal_unet(cfg: TemporalUNetConfig, key: Array) -> Dict[str, Any]:
@@ -160,6 +238,25 @@ def init_temporal_unet(cfg: TemporalUNetConfig, key: Array) -> Dict[str, Any]:
     p["gn_out_s"] = jnp.ones((cin,))
     p["gn_out_b"] = jnp.zeros((cin,))
     p["conv_out"] = jnp.zeros((cfg.kernel, cin, cfg.transition_dim))
+    if cfg.attention:
+        # appended LAST so the PRNG-key consumption of every
+        # pre-existing parameter is unchanged: attention=False params
+        # are bit-identical with or without this branch compiled in
+        cmid = cfg.base * cfg.mults[-1]
+        dh = cmid // cfg.attn_heads
+        p["attn"] = {
+            "gn_s": jnp.ones((cmid,)), "gn_b": jnp.zeros((cmid,)),
+            "wq": dense_init(next(ks), (cmid, cfg.attn_heads, dh),
+                             jnp.float32, fan_in=cmid),
+            "wk": dense_init(next(ks), (cmid, cfg.attn_heads, dh),
+                             jnp.float32, fan_in=cmid),
+            "wv": dense_init(next(ks), (cmid, cfg.attn_heads, dh),
+                             jnp.float32, fan_in=cmid),
+            # zero-init output projection: the fresh block is the
+            # identity, so adding it to a net (or flipping
+            # cfg.attention on) leaves the forward bitwise unchanged
+            "wo": jnp.zeros((cfg.attn_heads, dh, cmid)),
+        }
     return p
 
 
@@ -188,24 +285,27 @@ def temporal_unet_forward(params, x: Array, t: Array,
         params = policy.params_for_compute(params)
         temb = temb.astype(policy.compute)
 
+    fused = cfg.use_fused_norm
     h = _conv(x, params["conv_in"])
     skips = []
     for d in params["downs"]:
-        h = _resblock(d["res"], h, temb, cfg.groups)
+        h = _resblock(d["res"], h, temb, cfg.groups, fused)
         if "down" in d:
             skips.append(h)
             h = _conv(h, d["down"], stride=2)
-    h = _resblock(params["mid1"], h, temb, cfg.groups)
-    h = _resblock(params["mid2"], h, temb, cfg.groups)
+    h = _resblock(params["mid1"], h, temb, cfg.groups, fused)
+    if cfg.attention:
+        h = _attn_block(params["attn"], h, cfg)
+    h = _resblock(params["mid2"], h, temb, cfg.groups, fused)
     for u in params["ups"]:
         if "up" in u:
             B, H, C = h.shape
             h = jax.image.resize(h, (B, H * 2, C), "nearest")
             h = _conv(h, u["up"])
             h = jnp.concatenate([h, skips.pop()], axis=-1)
-        h = _resblock(u["res"], h, temb, cfg.groups)
-    h = jax.nn.silu(_groupnorm(h, params["gn_out_s"], params["gn_out_b"],
-                               cfg.groups))
+        h = _resblock(u["res"], h, temb, cfg.groups, fused)
+    h = _gn_silu(h, params["gn_out_s"], params["gn_out_b"], cfg.groups,
+                 fused)
     return _conv(h, params["conv_out"])
 
 

@@ -15,6 +15,9 @@ CASES = [
     (1, 2, 1, 96, 128, False, None),
     (1, 4, 4, 64, 256, True, None),
     (2, 2, 2, 130, 64, True, 16),
+    # non-causal with S off the block size: the DiT/temporal-UNet route
+    # (bidirectional) must mask the padded tail, not just the causal one
+    (2, 4, 2, 200, 32, False, None),
 ]
 
 
