@@ -22,6 +22,7 @@ from . import (
     bench_serving,
     bench_sharded_sampling,
     bench_solver_zoo,
+    bench_tolerance_tiers,
     table1_solver_grid,
     table2_highdim,
     table3_offtheshelf,
@@ -44,6 +45,7 @@ SUITES = {
     "planning": bench_planning.main,       # trajectory workload + planner loop
     "solver_zoo": bench_solver_zoo.main,   # zoo race + auto-selection report
     "score_eval": bench_score_eval.main,   # per-NFE hot-path roofline
+    "tolerance_tiers": bench_tolerance_tiers.main,  # per-class NFE economics
 }
 
 

@@ -116,7 +116,8 @@ def _expand(v: Array, x: Array) -> Array:
     return v.reshape(v.shape + (1,) * (x.ndim - 1))
 
 
-def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
+def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg,
+                   eps_abs, eps_rel):
     """x̃, x'' and the scaled error — reference path (see kernels/solver_step).
 
     e0 = h·a(t−h); d1 = h·g(t−h)²; d2 = √h·g(t−h); all shape (B,).
@@ -127,14 +128,24 @@ def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
     fp32 (error control is fp32 by design, and under the fp32 policy the
     upcasts are no-ops). Returns (x'' fp32, err fp32); the caller casts
     the accepted proposal back to the state dtype.
+
+    ``eps_abs``/``eps_rel`` are either Python floats (the static-config
+    path) or (B,) fp32 arrays (per-slot tolerance, DESIGN.md §14) —
+    expanded to broadcast against the state. With every slot at the same
+    value the broadcast arithmetic is bitwise identical to the float
+    path (same fp32 elementwise ops).
     """
     x, x_prime, score2, z, x_prev = (
         a.astype(jnp.float32) for a in (x, x_prime, score2, z, x_prev)
     )
+    if isinstance(eps_abs, jax.Array):
+        eps_abs = _expand(eps_abs, x)
+    if isinstance(eps_rel, jax.Array):
+        eps_rel = _expand(eps_rel, x)
     x_tilde = x - _expand(e0, x) * x_prime + _expand(d1, x) * score2 + _expand(d2, x) * z
     x_high = 0.5 * (x_prime + x_tilde)
     delta = mixed_tolerance(
-        x_prime, x_prev if cfg.prev_tolerance else None, eps_abs, cfg.eps_rel
+        x_prime, x_prev if cfg.prev_tolerance else None, eps_abs, eps_rel
     )
     if cfg.error_norm == "l2":
         err = scaled_error_l2(x_prime, x_high, delta)
@@ -145,11 +156,13 @@ def _step_math_jnp(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
     return x_high, err
 
 
-def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
+def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg,
+                     eps_abs, eps_rel):
     """Fused Pallas path. Operands stay in the state dtype (bf16 under
     ``bf16_full`` — that is the HBM-bandwidth win); the kernel upcasts
     each VMEM tile to fp32, accumulates the scaled-ℓ2 residual in fp32,
-    and emits x'' in the operand dtype with e2 always fp32."""
+    and emits x'' in the operand dtype with e2 always fp32. Per-slot
+    (B,) tolerances dispatch to the vector-ε kernel variant."""
     from repro.kernels.solver_step import ops as fused
 
     if cfg.error_norm != "l2":
@@ -157,13 +170,14 @@ def _step_math_fused(x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs):
     return fused.error_step(
         x, x_prime, score2, z, x_prev, e0, d1, d2,
         eps_abs=eps_abs,
-        eps_rel=cfg.eps_rel,
+        eps_rel=eps_rel,
         use_prev=cfg.prev_tolerance,
     )
 
 
 def _step_math_fused_sharded(
-    x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs, *, sharding
+    x, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs, eps_rel,
+    *, sharding
 ):
     """Fused path under a batch-sharded mesh: shard_map'd Pallas kernel
     with per-shard in-VMEM error reduction (DESIGN.md §3)."""
@@ -175,7 +189,7 @@ def _step_math_fused_sharded(
     return fused.sharded_error_step(
         x, x_prime, score2, z, x_prev, e0, d1, d2,
         eps_abs=eps_abs,
-        eps_rel=cfg.eps_rel,
+        eps_rel=eps_rel,
         use_prev=cfg.prev_tolerance,
         mesh=sharding.mesh,
         batch_axes=(axes,) if isinstance(axes, str) else tuple(axes),
@@ -214,6 +228,15 @@ class SolverCarry:
          compacts/admits its leaves per-slot alongside x and the
          per-slot keys, so a sample's conditioning travels with it.
          None (the default) for unconditional solves.
+      atol / rtol: optional per-slot error tolerances, shape (B,) fp32
+         (DESIGN.md §14). When present the loop body reads ε_abs/ε_rel
+         from *these leaves* instead of the static config, so each slot
+         solves at its own quality tier and the values travel through
+         chunking, compaction permutations, sharding, and the
+         device-resident event program exactly like ``cond`` — tier
+         changes are data, never a retrace. Both-or-neither: None (the
+         default) is the static-config path, bitwise identical to the
+         pre-tolerance-class solver.
     """
 
     x: Array
@@ -227,6 +250,8 @@ class SolverCarry:
     done: Array
     iterations: Array
     cond: Any = None
+    atol: Any = None
+    rtol: Any = None
 
     @property
     def batch(self) -> int:
@@ -245,6 +270,9 @@ def init_carry(
     config: AdaptiveConfig | None = None,
     sharding=None,
     cond=None,
+    atol=None,
+    rtol=None,
+    h0=None,
     **overrides,
 ) -> SolverCarry:
     """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot.
@@ -254,12 +282,27 @@ def init_carry(
     optional per-slot condition payload (DESIGN.md §9): every leaf must
     lead with the batch dim; leaves keep their own dtype (fp32 — the
     projection/guidance math is control-path, never state-dtype).
+
+    ``atol``/``rtol`` (DESIGN.md §14) install per-slot tolerance leaves:
+    scalars broadcast to (B,), (B,) arrays are taken as-is, and the loop
+    body then reads ε from the carry instead of the static config. Pass
+    both or neither. ``h0`` likewise overrides the initial step size
+    per-slot (scalar or (B,)); it is clamped to the t-span like
+    ``cfg.h_init``.
     """
     cfg = resolve_config(config, overrides)
     policy = resolve_policy(cfg.precision)
     x_init = x_init.astype(policy.state)
     c_arr, c_vec = _constraints(sharding)
     batch = x_init.shape[0]
+    if (atol is None) != (rtol is None):
+        raise ValueError("per-slot tolerances come in pairs: pass both "
+                         "atol and rtol, or neither")
+    if atol is not None:
+        atol = c_vec(jnp.broadcast_to(
+            jnp.asarray(atol, jnp.float32), (batch,)))
+        rtol = c_vec(jnp.broadcast_to(
+            jnp.asarray(rtol, jnp.float32), (batch,)))
     if cond is not None:
         cb = cond_batch(cond)
         if cb is not None and cb != batch:
@@ -272,16 +315,18 @@ def init_carry(
             cond,
         )
     t0 = c_vec(jnp.full((batch,), sde.T, jnp.float32))
-    h0 = c_vec(
-        jnp.minimum(jnp.full((batch,), cfg.h_init, jnp.float32), t0 - sde.t_eps)
-    )
+    h_of = cfg.h_init if h0 is None else h0
+    h_vec = c_vec(jnp.minimum(
+        jnp.broadcast_to(jnp.asarray(h_of, jnp.float32), (batch,)),
+        t0 - sde.t_eps,
+    ))
     zeros = c_vec(jnp.zeros((batch,), jnp.int32))
     x_init = c_arr(x_init)
     return SolverCarry(
         x=x_init,
         x_prev=x_init,
         t=t0,
-        h=h0,
+        h=h_vec,
         key=key,
         nfe=zeros,
         accepted=zeros,
@@ -289,6 +334,8 @@ def init_carry(
         done=c_vec(jnp.zeros((batch,), bool)),
         iterations=jnp.asarray(0, jnp.int32),
         cond=cond,
+        atol=atol,
+        rtol=rtol,
     )
 
 
@@ -349,6 +396,12 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
     labels — DESIGN.md §9) and then the precision policy's cast seam
     (outermost, DESIGN.md §8) around it. With ``cfg.conditioner=None``
     the composition collapses to exactly the pre-conditioning wrapping.
+
+    Tolerance resolution (DESIGN.md §14): when the carry holds per-slot
+    ``atol``/``rtol`` leaves the body reads ε from *them* — live carry
+    data, so compaction permutations and tiered admissions apply without
+    retracing — otherwise from the static ``eps_abs``/``cfg.eps_rel``
+    floats (the pre-tolerance-class closure, bitwise unchanged).
     """
     conditioner = cfg.conditioner
     policy = resolve_policy(cfg.precision)
@@ -422,8 +475,12 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         g2 = sde.diffusion(t2)
         d1 = (0.5 if pf else 1.0) * h_c * g2 * g2
         d2 = jnp.zeros_like(h_c) if pf else jnp.sqrt(h_c) * g2
+        # per-slot tolerance leaves win over the static config floats;
+        # the None-check is pytree structure (trace-time), not traced data
+        ea = eps_abs if s.atol is None else s.atol
+        er = cfg.eps_rel if s.rtol is None else s.rtol
         x_high, err = step_math(
-            x_base, x_prime, score2, z, x_prev, e0, d1, d2, cfg, eps_abs
+            x_base, x_prime, score2, z, x_prev, e0, d1, d2, cfg, ea, er
         )
         # the jnp step math returns x'' in fp32 (the fused kernel already
         # emits the operand dtype); the carry stores the state dtype
@@ -471,6 +528,8 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
             done=c_vec(t_new <= sde.t_eps + 1e-12),
             iterations=s.iterations + 1,
             cond=s.cond,
+            atol=s.atol,
+            rtol=s.rtol,
         )
 
     return body
@@ -659,6 +718,9 @@ def adaptive(
     denoise: bool = True,
     sharding=None,
     cond=None,
+    atol=None,
+    rtol=None,
+    h0=None,
     **overrides,
 ) -> SolveResult:
     """Algorithm 1: solve the reverse diffusion from T to t_eps adaptively.
@@ -671,6 +733,11 @@ def adaptive(
     ``cfg.conditioner`` (DESIGN.md §9); both default to None, the
     bit-identical unconditional path.
 
+    ``atol``/``rtol``/``h0`` (DESIGN.md §14) install per-slot tolerance
+    (and initial-step) leaves in the carry — scalars or (B,) arrays —
+    so one batch can mix quality tiers; None (the default) keeps the
+    static-config tolerance, bitwise identical to the pre-tier solver.
+
     ``sharding`` (a batch-axis NamedSharding, normally produced by
     ``repro.parallel.sharding.sample_state_shardings`` and threaded down
     from ``sample(..., mesh=...)``) constrains every (B, ...) and (B,)
@@ -682,7 +749,7 @@ def adaptive(
     """
     cfg = resolve_config(config, overrides)
     carry = init_carry(sde, x_init, key, config=cfg, sharding=sharding,
-                       cond=cond)
+                       cond=cond, atol=atol, rtol=rtol, h0=h0)
     carry = solve_chunk(
         sde, score_fn, carry,
         max_sync_iters=cfg.max_iters, config=cfg, sharding=sharding,

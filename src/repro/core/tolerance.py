@@ -35,10 +35,17 @@ Array = jax.Array
 def mixed_tolerance(
     x_low: Array,
     x_prev: Array | None,
-    eps_abs: float,
-    eps_rel: float,
+    eps_abs: "float | Array",
+    eps_rel: "float | Array",
 ) -> Array:
-    """δ per element (fp32). Pass x_prev=None for the δ(x') ablation variant."""
+    """δ per element (fp32). Pass x_prev=None for the δ(x') ablation variant.
+
+    ``eps_abs``/``eps_rel`` may be Python floats (one tolerance for the
+    whole batch — the static-config path) or fp32 arrays broadcastable
+    against ``x_low`` (per-sample tolerance classes, DESIGN.md §14, e.g.
+    (B, 1, ..., 1)-expanded (B,) carry leaves). The float path is
+    bitwise identical either way: same fp32 elementwise max/multiply.
+    """
     mag = jnp.abs(x_low.astype(jnp.float32))
     if x_prev is not None:
         mag = jnp.maximum(mag, jnp.abs(x_prev.astype(jnp.float32)))

@@ -196,3 +196,88 @@ def error_step(
     )(x, x_prime, score2, z, x_prev, e0[:, None], d1[:, None], d2[:, None])
     e2 = jnp.sqrt(acc[:, 0] / D)
     return x_high, e2
+
+
+def _error_kernel_vec(
+    x_ref, xp_ref, s2_ref, z_ref, xprev_ref,
+    e0_ref, d1_ref, d2_ref, ea_ref, er_ref,
+    xh_ref, acc_ref,
+    *, use_prev: bool,
+):
+    """``_error_kernel`` with ε_abs/ε_rel as per-sample (bb, 1) coeff
+    blocks instead of compile-time floats (DESIGN.md §14): tolerance is
+    carry *data*, so one compiled kernel serves every quality tier and a
+    tier change never retraces. The fp32 max/multiply against a
+    broadcast (bb, 1) block is bitwise identical to the same value as a
+    scalar constant — the per-slot path reproduces the static kernel
+    exactly when all slots agree."""
+    j = pl.program_id(1)
+
+    x = x_ref[:, :].astype(jnp.float32)
+    xp = xp_ref[:, :].astype(jnp.float32)
+    s2 = s2_ref[:, :].astype(jnp.float32)
+    z = z_ref[:, :].astype(jnp.float32)
+    x_tilde = x - e0_ref[:, :] * xp + d1_ref[:, :] * s2 + d2_ref[:, :] * z
+    x_high = 0.5 * (xp + x_tilde)
+    xh_ref[:, :] = x_high.astype(xh_ref.dtype)
+
+    mag = jnp.abs(xp)
+    if use_prev:
+        mag = jnp.maximum(mag, jnp.abs(xprev_ref[:, :].astype(jnp.float32)))
+    delta = jnp.maximum(ea_ref[:, :], er_ref[:, :] * mag)
+    r = (xp - x_high) / delta
+    partial = jnp.sum(r * r, axis=1, keepdims=True)  # (bb, 1) fp32
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[:, :] = jnp.zeros_like(acc_ref)
+
+    acc_ref[:, :] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_prev", "block_b", "block_d", "interpret"),
+)
+def error_step_vec(
+    x: Array,
+    x_prime: Array,
+    score2: Array,
+    z: Array,
+    x_prev: Array,
+    e0: Array,
+    d1: Array,
+    d2: Array,
+    eps_abs: Array,
+    eps_rel: Array,
+    *,
+    use_prev: bool = True,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = False,
+):
+    """``error_step`` with per-sample (B,) fp32 ε_abs/ε_rel operands
+    (tolerance-class serving, DESIGN.md §14). Same tiling, same fp32
+    arithmetic; the tolerances ride next to the step coefficients as
+    two more (bb, 1) blocks."""
+    B, D = x.shape
+    bb, bd = _blocks_for(x.dtype, B, D, block_b, block_d)
+    grid = (pl.cdiv(B, bb), pl.cdiv(D, bd))
+    state_spec = pl.BlockSpec((bb, bd), lambda i, j: (i, j))
+    coeff_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+    acc_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+
+    x_high, acc = pl.pallas_call(
+        functools.partial(_error_kernel_vec, use_prev=use_prev),
+        grid=grid,
+        in_specs=[state_spec] * 5 + [coeff_spec] * 5,
+        out_specs=(state_spec, acc_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, D), x.dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, x_prime, score2, z, x_prev, e0[:, None], d1[:, None], d2[:, None],
+      eps_abs.astype(jnp.float32)[:, None], eps_rel.astype(jnp.float32)[:, None])
+    e2 = jnp.sqrt(acc[:, 0] / D)
+    return x_high, e2

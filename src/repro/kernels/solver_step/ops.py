@@ -64,15 +64,37 @@ def em_step(x, score, z, c0, c1, c2, *, interpret: bool | None = None) -> Array:
     return out[:, :D].reshape(orig_shape)
 
 
+def _eps_is_vector(eps_abs, eps_rel) -> bool:
+    """Per-sample (B,) tolerance operands (DESIGN.md §14) vs static
+    floats. Tracers (jit-staged (B,) carry leaves) count as vectors;
+    0-d values are treated as floats so scalar callers keep the
+    compile-time-constant kernel."""
+    return any(getattr(e, "ndim", 0) >= 1 for e in (eps_abs, eps_rel))
+
+
+def _eps_vectors(eps_abs, eps_rel, batch: int):
+    ea = jnp.broadcast_to(jnp.asarray(eps_abs, jnp.float32), (batch,))
+    er = jnp.broadcast_to(jnp.asarray(eps_rel, jnp.float32), (batch,))
+    return ea, er
+
+
 def error_step(
     x, x_prime, score2, z, x_prev, e0, d1, d2,
     *,
-    eps_abs: float,
-    eps_rel: float,
+    eps_abs,
+    eps_rel,
     use_prev: bool = True,
     interpret: bool | None = None,
 ):
-    """Fused x̃/x''/δ/error. Returns (x'' with x's shape, e2 (B,))."""
+    """Fused x̃/x''/δ/error. Returns (x'' with x's shape, e2 (B,)).
+
+    ``eps_abs``/``eps_rel`` are floats (static tolerance, compile-time
+    kernel constants — the pre-tier path, bitwise unchanged) or (B,)
+    arrays (per-slot tolerance classes, DESIGN.md §14 — dispatched to
+    the vector-ε kernel where they ride as two more coeff blocks).
+    Zero padding stays exact either way: padded columns have mag 0 and
+    residual 0, contributing 0 to the error sum for any δ ≥ ε_abs > 0.
+    """
     interpret = _on_cpu() if interpret is None else interpret
     orig_shape = x.shape
     xf, D = _flatten_pad(x)
@@ -80,11 +102,18 @@ def error_step(
     s2f, _ = _flatten_pad(score2)
     zf, _ = _flatten_pad(z)
     xvf, _ = _flatten_pad(x_prev)
-    x_high, acc_e2 = _k.error_step(
-        xf, xpf, s2f, zf, xvf, e0, d1, d2,
-        eps_abs=float(eps_abs), eps_rel=float(eps_rel), use_prev=use_prev,
-        interpret=interpret,
-    )
+    if _eps_is_vector(eps_abs, eps_rel):
+        ea, er = _eps_vectors(eps_abs, eps_rel, xf.shape[0])
+        x_high, acc_e2 = _k.error_step_vec(
+            xf, xpf, s2f, zf, xvf, e0, d1, d2, ea, er,
+            use_prev=use_prev, interpret=interpret,
+        )
+    else:
+        x_high, acc_e2 = _k.error_step(
+            xf, xpf, s2f, zf, xvf, e0, d1, d2,
+            eps_abs=float(eps_abs), eps_rel=float(eps_rel), use_prev=use_prev,
+            interpret=interpret,
+        )
     # kernel normalized by padded D; rescale to the true dimension count.
     Dpad = xf.shape[1]
     e2 = acc_e2 * jnp.sqrt(Dpad / D)
@@ -94,8 +123,8 @@ def error_step(
 def sharded_error_step(
     x, x_prime, score2, z, x_prev, e0, d1, d2,
     *,
-    eps_abs: float,
-    eps_rel: float,
+    eps_abs,
+    eps_rel,
     mesh: Mesh,
     batch_axes,
     feature_axis: str | None = None,
@@ -114,7 +143,9 @@ def sharded_error_step(
     bit-for-bit in the batch-only case: rows are independent and each
     shard walks the same D-grid sequence.
 
-    Returns (x'' with x's shape, e2 (B,)).
+    Returns (x'' with x's shape, e2 (B,)). Per-slot (B,) tolerances
+    shard over the batch axes like every other per-sample coefficient,
+    so each device reads only its own slots' ε (DESIGN.md §14).
     """
     from repro.parallel.collectives import scaled_error_l2_psum
     from repro.parallel.compat import shard_map
@@ -130,13 +161,22 @@ def sharded_error_step(
     zf, _ = _flatten_pad_to(z, fsize * _LANES)
     xvf, _ = _flatten_pad_to(x_prev, fsize * _LANES)
     Dpad = xf.shape[1]
+    vec_eps = _eps_is_vector(eps_abs, eps_rel)
 
-    def body(xl, xpl, s2l, zl, xvl, e0l, d1l, d2l):
-        x_high, e2_loc = _k.error_step(
+    def _local(xl, xpl, s2l, zl, xvl, e0l, d1l, d2l, eal=None, erl=None):
+        if vec_eps:
+            return _k.error_step_vec(
+                xl, xpl, s2l, zl, xvl, e0l, d1l, d2l, eal, erl,
+                use_prev=use_prev, interpret=interpret,
+            )
+        return _k.error_step(
             xl, xpl, s2l, zl, xvl, e0l, d1l, d2l,
             eps_abs=float(eps_abs), eps_rel=float(eps_rel), use_prev=use_prev,
             interpret=interpret,
         )
+
+    def body(xl, xpl, s2l, zl, xvl, e0l, d1l, d2l, *eps_loc):
+        x_high, e2_loc = _local(xl, xpl, s2l, zl, xvl, e0l, d1l, d2l, *eps_loc)
         D_loc = xl.shape[1]
         if feature_axis is None:
             # per-sample reduction is shard-local; renormalize padded→true D
@@ -146,12 +186,16 @@ def sharded_error_step(
 
     state_spec = P(batch_axes, feature_axis)
     coeff_spec = P(batch_axes)
+    n_eps = 2 if vec_eps else 0
     fn = shard_map(
         body,
         mesh=mesh,
-        in_specs=(state_spec,) * 5 + (coeff_spec,) * 3,
+        in_specs=(state_spec,) * 5 + (coeff_spec,) * (3 + n_eps),
         out_specs=(state_spec, coeff_spec),
         check_rep=False,  # no replication rule for pallas_call
     )
-    x_high, e2 = fn(xf, xpf, s2f, zf, xvf, e0, d1, d2)
+    operands = (xf, xpf, s2f, zf, xvf, e0, d1, d2)
+    if vec_eps:
+        operands += _eps_vectors(eps_abs, eps_rel, xf.shape[0])
+    x_high, e2 = fn(*operands)
     return x_high[:, :D].reshape(orig_shape), e2

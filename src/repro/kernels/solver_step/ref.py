@@ -42,14 +42,21 @@ def error_step(
     d1: Array,
     d2: Array,
     *,
-    eps_abs: float,
-    eps_rel: float,
+    eps_abs,
+    eps_rel,
     use_prev: bool = True,
 ):
+    """Mirrors the kernel contract, including the per-sample tolerance
+    form (DESIGN.md §14): ``eps_abs``/``eps_rel`` may be floats or (B,)
+    fp32 arrays; arrays broadcast per-row like the (bb, 1) coeff blocks."""
     out_dtype = x.dtype
     x, x_prime, score2, z, x_prev = (
         a.astype(jnp.float32) for a in (x, x_prime, score2, z, x_prev)
     )
+    if getattr(eps_abs, "ndim", 0) >= 1:
+        eps_abs = jnp.asarray(eps_abs, jnp.float32)[:, None]
+    if getattr(eps_rel, "ndim", 0) >= 1:
+        eps_rel = jnp.asarray(eps_rel, jnp.float32)[:, None]
     x_tilde = x - e0[:, None] * x_prime + d1[:, None] * score2 + d2[:, None] * z
     x_high = 0.5 * (x_prime + x_tilde)
     mag = jnp.abs(x_prime)

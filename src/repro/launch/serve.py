@@ -90,7 +90,9 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
                     sync_horizon: int = 4, compaction: bool = True,
                     precision: str = "fp32", inpaint: bool = False,
                     cfg_scale: float | None = None,
-                    device_resident: bool = False) -> dict:
+                    device_resident: bool = False,
+                    tier: str | None = None,
+                    deadline_ms: float | None = None) -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
@@ -113,6 +115,13 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     classifier-free guidance, labels cycling per request uid. The
     conditioner is per-server (one compiled program); the payload is
     per-request and travels with its slot through compaction.
+
+    Tolerance tiers (DESIGN.md §14): ``tier`` names a quality class
+    every request rides (``draft``/``standard``/``high_fidelity``), or
+    ``"mixed"`` to cycle the presets across requests — the tiered
+    server then runs EDF-within-priority-band admission and the record
+    carries per-class NFE + deadline stats. ``deadline_ms`` sets each
+    request's latency budget; late deliveries count as misses.
     """
     from repro.core import AdaptiveConfig, VPSDE
     from repro.core.guidance import ClassifierFree, Inpaint
@@ -120,6 +129,7 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     from repro.launch.sample import make_sample_step
     from repro.models.dit import DiTConfig, init_dit
     from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+    from repro.serving.scheduler import EdfPriorityAdmission
 
     if inpaint and cfg_scale is not None:
         raise ValueError("pick one conditioner per server: "
@@ -143,10 +153,23 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     params = policy.cast_params(init_dit(net, jax.random.PRNGKey(0)))
     step = make_sample_step(net, sde, cfg)
     shape = (image_size, image_size, net.channels)
+    tiered = tier is not None
+    if tiered and tier != "mixed":
+        from repro.configs.diffusion import resolve_tier
+        resolve_tier(tier)  # fail fast on a bad preset name
     b = DiffusionBatcher(sde, step, params, shape,
                          slots=slots, cfg=cfg, mesh=mesh,
                          sync_horizon=sync_horizon, compaction=compaction,
-                         device_resident=device_resident)
+                         device_resident=device_resident,
+                         tolerance_classes=tiered or None,
+                         admission=(EdfPriorityAdmission(aging_s=5.0)
+                                    if tiered else None))
+    mixed_cycle = ("draft", "standard", "high_fidelity")
+
+    def request_tier(uid: int):
+        if not tiered:
+            return None
+        return mixed_cycle[uid % len(mixed_cycle)] if tier == "mixed" else tier
 
     def request_cond(uid: int):
         if inpaint:
@@ -162,7 +185,9 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         return None
 
     for uid in range(requests):
-        b.submit(ImageRequest(uid=uid, seed=uid, cond=request_cond(uid)))
+        b.submit(ImageRequest(uid=uid, seed=uid, cond=request_cond(uid),
+                              tier=request_tier(uid),
+                              deadline_ms=deadline_ms))
     t0 = time.time()
     done = b.run_to_completion()
     dt = time.time() - t0
@@ -186,6 +211,9 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "device_resident": device_resident,
         "host_transfers": b.host_transfers,
         "host_transfers_per_request": b.host_transfers / max(len(done), 1),
+        "tier": tier,
+        "deadline_ms": deadline_ms,
+        "class_stats": b.class_stats if tiered else None,
     }
     print(f"diffusion serve[{policy.name}, {rec['conditioner']}"
           f"{', device-resident' if device_resident else ''}]: "
@@ -196,6 +224,13 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
           f"wasted NFE {rec['wasted_nfe_fraction']:.1%}, "
           f"host transfers/request {rec['host_transfers_per_request']:.1f}, "
           f"refills/device {rec['refills_per_device']}")
+    if tiered:
+        for name in sorted(rec["class_stats"]):
+            s = rec["class_stats"][name]
+            print(f"  tier {name:>13}: {s['delivered']} delivered, "
+                  f"mean NFE {s['mean_nfe']:.0f}, "
+                  f"deadline misses {s['deadline_misses']}, "
+                  f"mean wait {s['mean_wait_s'] * 1e3:.0f}ms")
     return rec
 
 
@@ -242,6 +277,15 @@ def main() -> None:
     ap.add_argument("--cfg-scale", type=float, default=None,
                     help="per-request classifier-free guidance at this "
                          "scale (diffusion mode, DESIGN.md §9)")
+    ap.add_argument("--tier", default=None,
+                    help="tolerance class for diffusion requests — a "
+                         "preset (draft/standard/high_fidelity) or "
+                         "'mixed' to cycle presets across requests "
+                         "(DESIGN.md §14)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget; late deliveries "
+                         "count as deadline misses in the per-class "
+                         "stats (diffusion mode, DESIGN.md §14)")
     args = ap.parse_args()
 
     if args.plan:
@@ -261,7 +305,8 @@ def main() -> None:
                         compaction=not args.no_compaction,
                         precision=args.precision,
                         inpaint=args.inpaint, cfg_scale=args.cfg_scale,
-                        device_resident=args.device_resident)
+                        device_resident=args.device_resident,
+                        tier=args.tier, deadline_ms=args.deadline_ms)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

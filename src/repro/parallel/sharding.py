@@ -224,7 +224,8 @@ def sample_state_shardings(mesh: Mesh, batch: int, state_ndim: int):
 
 
 def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
-                           *, per_slot_keys: bool = False, cond=None):
+                           *, per_slot_keys: bool = False, cond=None,
+                           tolerances: bool = False):
     """A ``SolverCarry``-shaped pytree of NamedShardings (DESIGN.md §7).
 
     ``state_ndim`` is the ndim of the (B, ...) state arrays. With
@@ -239,6 +240,12 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
     gets a batch-axis sharding of its own ndim, so condition payloads
     live on the device that owns their slot — the shard-local
     compaction rule extends to conditioning unchanged.
+
+    ``tolerances`` (DESIGN.md §14) gives the per-slot ``atol``/``rtol``
+    leaves the same (B,) vector sharding as t/h — tolerance classes are
+    per-sample control state and live with their slot; False (the
+    default) matches a carry with no tolerance leaves (the None pytree
+    structure of the static-config path).
     """
     from repro.core.solvers.adaptive import SolverCarry
 
@@ -247,15 +254,17 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
     cond_s = jax.tree_util.tree_map(
         lambda l: batch_sharding(mesh, batch, l.ndim), cond,
     ) if cond is not None else None
+    tol_s = vec if tolerances else None
     return SolverCarry(
         x=arr, x_prev=arr, t=vec, h=vec, key=key_s,
         nfe=vec, accepted=vec, rejected=vec, done=vec, iterations=rep,
-        cond=cond_s,
+        cond=cond_s, atol=tol_s, rtol=tol_s,
     )
 
 
 def serving_loop_shardings(mesh: Mesh, batch: int, state_ndim: int,
-                           *, per_slot_keys: bool = True, cond=None):
+                           *, per_slot_keys: bool = True, cond=None,
+                           tolerances: bool = False):
     """Donation-safe sharding pair for the device-resident serve loop
     (DESIGN.md §12): ``(carry_shardings, scalar_sharding)``.
 
@@ -270,5 +279,6 @@ def serving_loop_shardings(mesh: Mesh, batch: int, state_ndim: int,
     """
     carry = solver_carry_shardings(
         mesh, batch, state_ndim, per_slot_keys=per_slot_keys, cond=cond,
+        tolerances=tolerances,
     )
     return carry, replicated(mesh)

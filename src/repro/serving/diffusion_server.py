@@ -53,6 +53,7 @@ only watches t and swaps slots.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional
 
@@ -65,14 +66,18 @@ from repro.core.precision import resolve_policy
 from repro.core.sde import SDE
 from repro.core.solvers import solver_nfe_per_iteration
 from repro.core.solvers.adaptive import SolverCarry, events_pending
+from repro.serving.scheduler import (
+    AdmissionPolicy, FifoAdmission, TierAccounting, tier_name,
+)
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class ImageRequest:
-    """One sampling request (DESIGN.md §4/§9): a seed, and optionally a
-    per-request condition payload for the server's conditioner."""
+    """One sampling request (DESIGN.md §4/§9/§14): a seed, optionally a
+    per-request condition payload for the server's conditioner, and —
+    on a tiered server — a tolerance class, deadline, and priority."""
 
     uid: int
     seed: int
@@ -82,14 +87,31 @@ class ImageRequest:
     #: (with a conditioner configured) means the neutral payload —
     #: zero mask / label 0, i.e. effectively unconditional.
     cond: Any = None
+    #: tolerance class (DESIGN.md §14): a preset name from
+    #: ``repro.configs.diffusion.TOLERANCE_CLASSES`` (or the server's
+    #: own registry) or a ``ToleranceClass``. None = the server's
+    #: static-config tolerance (the pre-tier behaviour).
+    tier: Any = None
+    #: latency budget in milliseconds from submission; None = no
+    #: deadline (a tier's own ``deadline_ms`` applies if set)
+    deadline_ms: Optional[float] = None
+    #: admission band, lower = more urgent; None defers to the tier's
+    #: ``priority`` (0 for untiered requests)
+    priority: Optional[int] = None
     result: Optional[np.ndarray] = None
     nfe: int = 0
     done: bool = False
+    #: set at delivery: did this request outlive its deadline?
+    deadline_missed: bool = False
     #: device iterations spent occupying a slot (admission → retirement);
     #: nfe_per_iter·resident_iters − nfe is this request's
     #: frozen-passenger waste
     resident_iters: int = 0
+    #: absolute deadline on the server's clock, stamped at submit()
+    deadline_at: Optional[float] = dataclasses.field(default=None, repr=False)
     _admit_iters: int = dataclasses.field(default=0, repr=False)
+    _submit_t: float = dataclasses.field(default=0.0, repr=False)
+    _seat_t: float = dataclasses.field(default=0.0, repr=False)
 
 
 class DiffusionBatcher:
@@ -121,6 +143,17 @@ class DiffusionBatcher:
     rows, and compaction moves condition leaves with their samples —
     shard-locally, exactly like the per-slot PRNG keys — so a
     request's conditioning follows it through any slot permutation.
+
+    Tolerance tiers (DESIGN.md §14): ``tolerance_classes`` turns on
+    per-request quality tiers — the carry grows per-slot ``atol``/
+    ``rtol`` leaves so every seated request solves at its own class's
+    tolerance inside one fused device step; ``admission`` picks which
+    queued requests take free slots (FIFO default; EDF within priority
+    bands via ``scheduler.EdfPriorityAdmission``) and ``delivery``
+    accumulates per-class NFE + deadline-miss counters at the ``_d2h``
+    accounting seam (``class_stats``). Left off, the carry keeps the
+    exact pre-tier pytree structure and the serve loop is bitwise
+    identical to the static-config stack.
 
     ``device_resident=True`` (DESIGN.md §12) replaces the per-horizon
     host round-trip with the on-device multi-horizon driver: up to
@@ -155,6 +188,10 @@ class DiffusionBatcher:
         max_horizons: int = 32,
         solver: str = "adaptive",
         solver_kwargs: Optional[dict] = None,
+        tolerance_classes=None,
+        admission: Optional[AdmissionPolicy] = None,
+        delivery=None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
@@ -175,6 +212,31 @@ class DiffusionBatcher:
         self.nfe_per_iter = solver_nfe_per_iteration(
             solver, **(solver_kwargs or {})
         )
+        #: tiered serving (DESIGN.md §14): truthy grows the carry per-slot
+        #: ``atol``/``rtol`` leaves so each seated request solves at its
+        #: own tolerance; a dict is this server's name → ToleranceClass
+        #: registry (default: the ``configs.diffusion`` presets). False
+        #: keeps the exact pre-tier carry structure — the static-config
+        #: path stays bitwise identical.
+        self.tiered = bool(tolerance_classes)
+        self.tolerance_classes = (
+            tolerance_classes if isinstance(tolerance_classes, dict) else None
+        )
+        #: admission stage (DESIGN.md §14): which queued requests take
+        #: free slots. FIFO = the pre-policy behaviour, exactly.
+        self.admission = admission if admission is not None else FifoAdmission()
+        #: delivery stage: per-class NFE + deadline accounting at the
+        #: ``_d2h`` seam (anything with ``on_deliver(req, now)``)
+        self.delivery = delivery if delivery is not None else TierAccounting()
+        self._clock = clock if clock is not None else time.monotonic
+        #: the static-config tolerance a tier-less request rides — same
+        #: resolution rule as ``solve_chunk`` (sde-calibrated eps_abs
+        #: unless the config pins one)
+        self._default_atol = float(
+            sde.abs_tolerance if self.cfg.eps_abs is None else self.cfg.eps_abs
+        )
+        self._default_rtol = float(self.cfg.eps_rel)
+        self._default_h0 = min(float(self.cfg.h_init), sde.T - sde.t_eps)
         self.conditioner = self.cfg.conditioner
         cond_struct = (
             None if self.conditioner is None
@@ -193,7 +255,7 @@ class DiffusionBatcher:
                 )
             self._carry_shardings = solver_carry_shardings(
                 mesh, slots, 1 + len(self.shape), per_slot_keys=True,
-                cond=cond_struct,
+                cond=cond_struct, tolerances=self.tiered,
             )
             self.step_fn = jax.jit(
                 lambda p, c: sample_step(p, c, max_sync_iters=self.sync_horizon),
@@ -245,6 +307,12 @@ class DiffusionBatcher:
             # idle slots carry the neutral payload (zero mask / label 0)
             cond=(None if self.conditioner is None
                   else self.conditioner.neutral_cond(B, self.shape)),
+            # tiered: idle slots hold the default-class tolerance; the
+            # admission scatter overwrites admitted rows (DESIGN.md §14)
+            atol=(jnp.full((B,), self._default_atol, jnp.float32)
+                  if self.tiered else None),
+            rtol=(jnp.full((B,), self._default_rtol, jnp.float32)
+                  if self.tiered else None),
         )
         self._carry = self._shard_carry(self._carry)
         self._occupied = None
@@ -329,7 +397,12 @@ class DiffusionBatcher:
             )
             return carry, events_pending(carry, occupied, wait_all=wait_all)
 
-        def event_update(carry, perm, admit_mask, prior_keys, noise_keys):
+        def event_update(carry, perm, admit_mask, prior_keys, noise_keys,
+                         admit_atol=None, admit_rtol=None, admit_h=None):
+            # the three trailing (B,) fp32 buffers are the tiered
+            # admission's per-request tolerance/step rows (DESIGN.md
+            # §14); the untiered server never passes them, so its trace
+            # and donation layout are unchanged
             def upd(leaf, admit):
                 leaf = jnp.take(leaf, perm, axis=0)
                 m = admit_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
@@ -343,7 +416,8 @@ class DiffusionBatcher:
                 x=upd(carry.x, priors),
                 x_prev=upd(carry.x_prev, priors),
                 t=upd(carry.t, jnp.float32(self.sde.T)),
-                h=upd(carry.h, jnp.float32(h0)),
+                h=upd(carry.h,
+                      jnp.float32(h0) if admit_h is None else admit_h),
                 key=upd(carry.key, noise_keys),
                 nfe=upd(carry.nfe, 0),
                 accepted=upd(carry.accepted, 0),
@@ -358,6 +432,10 @@ class DiffusionBatcher:
                       jax.tree_util.tree_map(
                           lambda l: jnp.take(l, perm, axis=0), carry.cond
                       )),
+                atol=(None if carry.atol is None
+                      else upd(carry.atol, admit_atol)),
+                rtol=(None if carry.rtol is None
+                      else upd(carry.rtol, admit_rtol)),
             )
 
         if self._carry_shardings is not None:
@@ -368,6 +446,7 @@ class DiffusionBatcher:
             carry_s, flag_s = serving_loop_shardings(
                 self.mesh, self.n, 1 + len(self.shape),
                 per_slot_keys=True, cond=cond_struct,
+                tolerances=self.tiered,
             )
             self._driver_fn = jax.jit(
                 driver, donate_argnums=(1,),
@@ -411,10 +490,67 @@ class DiffusionBatcher:
             struct, req.cond,
         )
 
+    def _resolve_tier(self, tier):
+        """Tier name / ToleranceClass → ToleranceClass, against this
+        server's registry (or the ``configs.diffusion`` presets)."""
+        from repro.configs.diffusion import ToleranceClass, resolve_tier
+
+        if isinstance(tier, ToleranceClass):
+            return tier
+        if self.tolerance_classes is not None:
+            if tier in self.tolerance_classes:
+                return self.tolerance_classes[tier]
+            raise KeyError(
+                f"unknown tolerance class {tier!r}; this server registers "
+                f"{sorted(self.tolerance_classes)}"
+            )
+        return resolve_tier(tier)
+
+    def _request_tol(self, req: ImageRequest):
+        """An admitted request's (atol, rtol, h0) floats (DESIGN.md §14):
+        its tolerance class with None fields deferring to the serving
+        config / SDE defaults — a tier-less request rides exactly the
+        static-config values."""
+        if req.tier is None:
+            return self._default_atol, self._default_rtol, self._default_h0
+        tier = self._resolve_tier(req.tier)
+        atol = self._default_atol if tier.eps_abs is None else float(tier.eps_abs)
+        h = self.cfg.h_init if tier.h_init is None else tier.h_init
+        return atol, float(tier.eps_rel), min(
+            float(h), self.sde.T - self.sde.t_eps
+        )
+
     def submit(self, req: ImageRequest) -> None:
         """Queue a request; it enters a slot at the next sync horizon
-        with a free slot (DESIGN.md §7)."""
+        with a free slot (DESIGN.md §7). Stamps the submission clock and
+        resolves the request's deadline/priority from its tolerance
+        class (DESIGN.md §14) so the admission policy orders on settled
+        values."""
+        if req.tier is not None and not self.tiered:
+            raise ValueError(
+                f"request {req.uid} carries tier {req.tier!r} but this "
+                "server was built without tolerance_classes — its carry "
+                "has no per-slot tolerance leaves to honour it"
+            )
+        now = self._clock()
+        req._submit_t = now
+        tier = None if req.tier is None else self._resolve_tier(req.tier)
+        if req.priority is None:
+            req.priority = 0 if tier is None else int(tier.priority)
+        deadline_ms = req.deadline_ms
+        if deadline_ms is None and tier is not None:
+            deadline_ms = tier.deadline_ms
+        req.deadline_at = (
+            None if deadline_ms is None else now + deadline_ms / 1000.0
+        )
         self.queue.append(req)
+
+    @property
+    def class_stats(self) -> Dict[str, Any]:
+        """Per-tolerance-class delivery counters (DESIGN.md §14) as
+        plain dicts — mean NFE, deadline misses, queue wait — from the
+        delivery stage's accounting at the ``_d2h`` seam."""
+        return {name: s.as_dict() for name, s in self.delivery.stats.items()}
 
     @property
     def wasted_nfe_fraction(self) -> float:
@@ -448,6 +584,7 @@ class DiffusionBatcher:
         request, move it to ``finished``, free its slot, and charge the
         waste accounting (shared by the host-driven and device-resident
         paths)."""
+        now = self._clock()
         for row, i in zip(rows, conv_idx):
             req = self._slot_req[i]
             req.result = row
@@ -458,20 +595,28 @@ class DiffusionBatcher:
             self.useful_nfe += int(nfe[i])
             self.resident_nfe += self.nfe_per_iter * req.resident_iters
             self._slot_req[i] = None
+            # delivery stage (DESIGN.md §14): per-class NFE + deadline
+            # accounting rides the rows already pulled through _d2h
+            self.delivery.on_deliver(req, now)
 
     def _admit_from_queue(self):
         """Seat queued requests in free slots (host bookkeeping only —
-        the slot-state writes are the caller's, per path). Returns the
-        admitted (slot index, request) lists."""
-        admit_pos, reqs = [], []
-        for i in range(self.n):
-            if self._slot_req[i] is None and self.queue:
-                req = self.queue.popleft()
-                self._slot_req[i] = req
-                req._admit_iters = self.total_iterations
-                self.refills_per_device[self.slot_device(i)] += 1
-                admit_pos.append(i)
-                reqs.append(req)
+        the slot-state writes are the caller's, per path). The admission
+        stage picks *which* queued requests go (FIFO by default, EDF-
+        within-priority-bands via ``EdfPriorityAdmission``); the chosen
+        are seated lowest-free-slot-first. Returns the admitted (slot
+        index, request) lists."""
+        free = [i for i in range(self.n) if self._slot_req[i] is None]
+        if not free or not self.queue:
+            return [], []
+        now = self._clock()
+        reqs = self.admission.select(self.queue, len(free), now)
+        admit_pos = free[: len(reqs)]
+        for i, req in zip(admit_pos, reqs):
+            self._slot_req[i] = req
+            req._admit_iters = self.total_iterations
+            req._seat_t = now
+            self.refills_per_device[self.slot_device(i)] += 1
         return admit_pos, reqs
 
     def _compaction_perm(self) -> np.ndarray:
@@ -565,6 +710,16 @@ class DiffusionBatcher:
 
         x_admit = jnp.stack(priors).astype(c.x.dtype) if admit_pos else None
         h0 = min(self.cfg.h_init, self.sde.T - self.sde.t_eps)
+        # tiered admission (DESIGN.md §14): each admitted request's
+        # tolerance-class (atol, rtol, h0) rows scatter into the same
+        # positions as its prior/key rows; untiered servers keep the
+        # scalar h0 write below, bit for bit
+        tol_a = tol_r = tol_h = None
+        if self.tiered and admit_pos:
+            tols = [self._request_tol(r) for r in reqs]
+            tol_a = jnp.asarray([t[0] for t in tols], jnp.float32)
+            tol_r = jnp.asarray([t[1] for t in tols], jnp.float32)
+            tol_h = jnp.asarray([t[2] for t in tols], jnp.float32)
         # condition leaves move with their samples (permute + row scatter
         # like every other per-slot leaf — the DESIGN.md §9 compaction
         # rule: payloads travel shard-locally, like keys)
@@ -584,7 +739,8 @@ class DiffusionBatcher:
             x=update(c.x, admit_val=x_admit),
             x_prev=update(c.x_prev, admit_val=x_admit),
             t=update(c.t, admit_val=jnp.float32(self.sde.T)),
-            h=update(c.h, admit_val=jnp.float32(h0)),
+            h=update(c.h,
+                     admit_val=jnp.float32(h0) if tol_h is None else tol_h),
             key=update(c.key,
                        admit_val=jnp.stack(noise_keys) if admit_pos else None),
             nfe=update(c.nfe, admit_val=jnp.int32(0)),
@@ -596,6 +752,8 @@ class DiffusionBatcher:
             # trips on a long-lived server
             iterations=jnp.asarray(0, jnp.int32),
             cond=cond_new,
+            atol=(update(c.atol, admit_val=tol_a) if self.tiered else None),
+            rtol=(update(c.rtol, admit_val=tol_r) if self.tiered else None),
         ))
         self._host_iters = 0
 
@@ -649,13 +807,28 @@ class DiffusionBatcher:
                 .set(jnp.stack(rows)) if admit_pos
                 else jnp.zeros((self.n, 2), jnp.uint32)
             )
-            self._carry = self._event_fn(
+            ops = [
                 self._carry,
                 self._h2d_vec(perm.astype(np.int32)),
                 self._h2d_vec(admit_mask),
                 kbuf([k[0] for k in keys]),  # prior keys → on-device draws
                 kbuf([k[1] for k in keys]),  # per-slot noise streams
-            )
+            ]
+            if self.tiered:
+                # per-request tolerance rows ride the same fixed-shape
+                # full-B buffer pattern as the key rows (DESIGN.md §14)
+                tols = [self._request_tol(r) for r in reqs]
+
+                def fbuf(vals):
+                    buf = np.zeros(self.n, np.float32)
+                    if admit_pos:
+                        buf[admit_pos] = vals
+                    return self._h2d_vec(buf)
+
+                ops += [fbuf([t[0] for t in tols]),
+                        fbuf([t[1] for t in tols]),
+                        fbuf([t[2] for t in tols])]
+            self._carry = self._event_fn(*ops)
             if self.conditioner is not None and admit_pos:
                 # admission payloads stay per-request: the ragged cond
                 # rows are scattered outside the fixed-shape event jit

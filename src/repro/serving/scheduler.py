@@ -1,4 +1,8 @@
-"""Continuous-batching decode scheduler (vLLM-style slots, pure JAX step).
+"""Continuous-batching schedulers: the LM decode scheduler (vLLM-style
+slots, pure JAX step) and the serving-stage policy seam (DESIGN.md §14)
+shared with the diffusion batcher — pluggable admission ordering
+(FIFO / deadline-priority EDF) and the per-class delivery accounting
+stage.
 
 The device step is the same pjit'd ``serve_step`` the dry-run lowers —
 fixed batch of SLOTS; the host-side scheduler multiplexes requests onto
@@ -27,6 +31,7 @@ code.
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
@@ -39,6 +44,140 @@ from repro.models import init_decode_state
 from repro.models.config import ModelConfig
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Serving-stage policy seam (DESIGN.md §14). The serve loop decomposes
+# into admission → solve → delivery stages; the solve stage is the jitted
+# device program (sample_step / driver), these classes are the pluggable
+# host-side halves. They are duck-typed over request objects exposing
+# ``priority`` (int band, lower = more urgent), ``deadline_at`` (absolute
+# clock time or None), ``_submit_t`` (submission clock time) and ``uid``
+# — both ``ImageRequest`` and any future request type qualify.
+# ---------------------------------------------------------------------------
+
+
+class AdmissionPolicy:
+    """Admission stage: choose which queued requests take free slots.
+
+    The base policy is FIFO — pop in submission order — which preserves
+    the pre-policy batcher behaviour exactly (and is what the bitwise
+    serving-identity gates pin). ``select`` removes the chosen requests
+    from ``queue`` and returns them in seating order; the caller assigns
+    them to free slots lowest-index first.
+    """
+
+    def select(self, queue: Deque, n_free: int, now: float) -> List:
+        chosen = []
+        while queue and len(chosen) < n_free:
+            chosen.append(queue.popleft())
+        return chosen
+
+
+#: explicit name for the default stage (reads better at call sites)
+class FifoAdmission(AdmissionPolicy):
+    pass
+
+
+@dataclasses.dataclass
+class EdfPriorityAdmission(AdmissionPolicy):
+    """Earliest-deadline-first within priority bands (DESIGN.md §14).
+
+    Ordering key: (effective priority band, deadline, submission time,
+    uid) — bands are never inverted, and within a band the request whose
+    deadline expires soonest is seated first (no-deadline requests sort
+    after every deadlined one in their band; submission time breaks
+    ties, keeping the policy FIFO among equals).
+
+    ``aging_s`` is the anti-starvation lever: a request's effective band
+    drops by one for every ``aging_s`` seconds it has waited, without a
+    floor — so under a saturating flood of urgent short-deadline
+    traffic, any waiting request eventually occupies a band *below*
+    every fresh arrival and must be seated. None disables aging (pure
+    static bands; a saturated top band then starves lower ones — the
+    property suite demonstrates both behaviours).
+    """
+
+    aging_s: Optional[float] = None
+
+    def order_key(self, req, now: float):
+        band = req.priority
+        if self.aging_s is not None and self.aging_s > 0:
+            band -= int(max(0.0, now - req._submit_t) / self.aging_s)
+        deadline = math.inf if req.deadline_at is None else req.deadline_at
+        return (band, deadline, req._submit_t, req.uid)
+
+    def select(self, queue: Deque, n_free: int, now: float) -> List:
+        ranked = sorted(queue, key=lambda r: self.order_key(r, now))
+        chosen = ranked[:n_free]
+        for r in chosen:
+            queue.remove(r)
+        return chosen
+
+
+@dataclasses.dataclass
+class TierStats:
+    """Per-tolerance-class delivery counters (DESIGN.md §14), accumulated
+    at the batcher's ``_d2h`` accounting seam — the NFE numbers come from
+    the same pulled (B,) bookkeeping the waste accounting reads, never an
+    extra transfer."""
+
+    delivered: int = 0
+    nfe_total: int = 0
+    deadline_misses: int = 0
+    deadline_met: int = 0
+    wait_s_total: float = 0.0  # submission → admission queue wait
+
+    @property
+    def mean_nfe(self) -> float:
+        return self.nfe_total / self.delivered if self.delivered else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "delivered": self.delivered,
+            "mean_nfe": self.mean_nfe,
+            "deadline_misses": self.deadline_misses,
+            "deadline_met": self.deadline_met,
+            "mean_wait_s": (self.wait_s_total / self.delivered
+                            if self.delivered else 0.0),
+        }
+
+
+class TierAccounting:
+    """Delivery stage: per-class NFE + deadline-miss/violation counters.
+
+    ``on_deliver`` runs once per retired request, right after the
+    retired rows crossed ``_d2h`` — the single counted device→host seam
+    — so tier accounting adds zero transfers. A delivered-late request
+    counts as a miss (``deliver_t > deadline_at``); requests without a
+    deadline count under ``deadline_met``.
+    """
+
+    def __init__(self):
+        self.stats: Dict[str, TierStats] = {}
+
+    def on_deliver(self, req, now: float) -> None:
+        name = tier_name(req)
+        s = self.stats.setdefault(name, TierStats())
+        s.delivered += 1
+        s.nfe_total += int(req.nfe)
+        s.wait_s_total += max(0.0, req._seat_t - req._submit_t)
+        missed = req.deadline_at is not None and now > req.deadline_at
+        req.deadline_missed = missed
+        if missed:
+            s.deadline_misses += 1
+        else:
+            s.deadline_met += 1
+
+
+def tier_name(req) -> str:
+    """A request's tolerance-class name for accounting: the tier's
+    ``name`` (preset string or ToleranceClass), or ``"default"`` for
+    untiered requests riding the server's static config."""
+    tier = getattr(req, "tier", None)
+    if tier is None:
+        return "default"
+    return tier if isinstance(tier, str) else tier.name
 
 
 @dataclasses.dataclass

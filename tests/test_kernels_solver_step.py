@@ -84,6 +84,52 @@ def test_error_step_multidim_state(rng):
                                rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: jnp.dtype(d).name)
+@pytest.mark.parametrize("use_prev", [True, False], ids=["prev", "noprev"])
+def test_error_step_vec_matches_ref(shape, dtype, use_prev, rng):
+    """Per-sample tolerance form (DESIGN.md §14): with (B,) ε vectors of
+    *distinct* values the kernel must agree with the oracle row-wise —
+    each sample's mixed-error norm sees only its own (atol, rtol)."""
+    B, D = shape
+    ks = jax.random.split(rng, 10)
+    x, xp, s2, z, xv = (jax.random.normal(k, shape, dtype) for k in ks[:5])
+    e0, d1, d2 = (jax.random.uniform(k, (B,)) for k in ks[5:8])
+    eps_abs = jax.random.uniform(ks[8], (B,), jnp.float32, 1e-3, 0.1)
+    eps_rel = jax.random.uniform(ks[9], (B,), jnp.float32, 0.01, 0.5)
+    kw = dict(eps_abs=eps_abs, eps_rel=eps_rel, use_prev=use_prev)
+    xh_k, e2_k = ops.error_step(x, xp, s2, z, xv, e0, d1, d2, **kw)
+    xh_r, e2_r = ref.error_step(x, xp, s2, z, xv, e0, d1, d2, **kw)
+    assert xh_k.dtype == jnp.dtype(dtype)
+    assert e2_k.dtype == jnp.float32 and e2_r.dtype == jnp.float32
+    np.testing.assert_allclose(_f32(xh_k), _f32(xh_r),
+                               **TOLS[jnp.dtype(dtype)])
+    np.testing.assert_allclose(np.asarray(e2_k), np.asarray(e2_r),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_error_step_uniform_vec_bitwise_matches_scalar(rng):
+    """The bitwise-identity premise the tiered serving gate rests on
+    (DESIGN.md §14): a uniform (B,) tolerance vector is the same fp32
+    broadcast multiply as the scalar constant — identical bits in both
+    x'' and e2, so single-class serving cannot drift from the static
+    config path."""
+    B, D = 8, 3072
+    ks = jax.random.split(rng, 8)
+    x, xp, s2, z, xv = (jax.random.normal(k, (B, D)) for k in ks[:5])
+    e0, d1, d2 = (jax.random.uniform(k, (B,)) for k in ks[5:])
+    ea, er = 0.0078, 0.05
+    xh_s, e2_s = ops.error_step(x, xp, s2, z, xv, e0, d1, d2,
+                                eps_abs=ea, eps_rel=er)
+    xh_v, e2_v = ops.error_step(
+        x, xp, s2, z, xv, e0, d1, d2,
+        eps_abs=jnp.full((B,), ea, jnp.float32),
+        eps_rel=jnp.full((B,), er, jnp.float32),
+    )
+    np.testing.assert_array_equal(np.asarray(xh_s), np.asarray(xh_v))
+    np.testing.assert_array_equal(np.asarray(e2_s), np.asarray(e2_v))
+
+
 def test_fused_solver_matches_jnp_solver(rng):
     """Full Algorithm 1 with use_fused_kernel=True == jnp path."""
     from repro.core import VPSDE, sample

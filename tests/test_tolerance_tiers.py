@@ -1,0 +1,224 @@
+"""Mixed-tier serving conformance (DESIGN.md §14).
+
+The tentpole contract: per-slot tolerances travel through the serving
+stack exactly like condition payloads, so a wave mixing draft /
+standard / high_fidelity requests delivers every sample *bit-identical*
+to a solo ``adaptive()`` run at that request's own tolerance — across
+sync horizons, compaction on/off, and the device-resident event
+program — with exact per-request NFE. Plus the no-retrace discipline:
+admitting a different tolerance class is a carry *value* change, never
+a new trace of the solve step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.diffusion import TOLERANCE_CLASSES, ToleranceClass
+from repro.core import AdaptiveConfig, VPSDE
+from repro.core.analytic import gaussian_noise_pred
+from repro.core.solvers.adaptive import adaptive
+from repro.launch.sample import make_sample_step
+from repro.models.dit import DiTConfig
+from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
+
+MU, S0 = 0.3, 0.5
+D = 32
+
+#: one wave mixing every preset plus tier-less (default-class) requests
+WAVE = ["draft", "high_fidelity", None, "standard", "draft", None,
+        "high_fidelity", "draft", "standard", None]
+
+
+@pytest.fixture(scope="module")
+def server_parts():
+    sde = VPSDE()
+    cfg = AdaptiveConfig(eps_rel=0.05)
+    net = DiTConfig(image_size=4, patch=4, d_model=8, num_layers=1,
+                    num_heads=1, d_ff=8)  # unused shapes; signature holder
+    step = make_sample_step(net, sde, cfg,
+                            forward_fn=gaussian_noise_pred(sde, MU, S0))
+    return sde, cfg, step
+
+
+def _score_fn(sde):
+    """The exact score math make_sample_step builds from the noise-pred
+    forward_fn — same ops, same casts, so solo solves are bit-comparable
+    to served ones."""
+    fwd = gaussian_noise_pred(sde, MU, S0)
+
+    def score(x, t):
+        _, std = sde.marginal(t)
+        out = fwd(None, x, t).astype(jnp.float32)
+        return -out / std.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    return score
+
+
+def _request_eps(sde, cfg, tier):
+    """(atol, rtol) a request of ``tier`` must solve at — the server's
+    resolution rule (tier eps, defaults from sde/config)."""
+    default_atol = float(
+        sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs
+    )
+    if tier is None:
+        return default_atol, float(cfg.eps_rel)
+    t = TOLERANCE_CLASSES[tier]
+    return (default_atol if t.eps_abs is None else float(t.eps_abs),
+            float(t.eps_rel))
+
+
+def _solo_reference(sde, cfg, seed, tier):
+    """Solo batch-1 ``adaptive()`` at the request's own tolerance, under
+    the server's admission key discipline (PRNGKey(seed) split into
+    prior/noise keys)."""
+    k_prior, k_noise = jax.random.split(jax.random.PRNGKey(seed))
+    x0 = sde.prior_sample(k_prior, (D,))[None]
+    atol, rtol = _request_eps(sde, cfg, tier)
+    res = adaptive(sde, _score_fn(sde), x0, k_noise[None], config=cfg,
+                   denoise=False, atol=atol, rtol=rtol)
+    return np.asarray(res.x[0]), int(np.asarray(res.nfe)[0])
+
+
+def _serve_wave(sde, cfg, step, **kw):
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=4, cfg=cfg, tolerance_classes=True, **kw)
+    for uid, tier in enumerate(WAVE):
+        b.submit(ImageRequest(uid=uid, seed=1000 + uid, tier=tier))
+    done = b.run_to_completion()
+    assert len(done) == len(WAVE)
+    return b, done
+
+
+@pytest.mark.parametrize("kw", [
+    dict(sync_horizon=1),
+    dict(sync_horizon=8),
+    dict(sync_horizon=8, compaction=False),
+    dict(sync_horizon=4, device_resident=True),
+], ids=["h1", "h8", "h8-nocompact", "device-resident"])
+def test_mixed_wave_bit_identical_to_solo_at_own_tolerance(
+        server_parts, kw):
+    """Every request in a mixed-tier wave delivers the exact sample (and
+    NFE) a solo adaptive() run at that request's tolerance produces:
+    per-slot tolerances ride compaction permutations, sync horizons, and
+    the device-resident event program without perturbing any
+    trajectory."""
+    sde, cfg, step = server_parts
+    _, done = _serve_wave(sde, cfg, step, **kw)
+    for uid, tier in enumerate(WAVE):
+        x_ref, nfe_ref = _solo_reference(sde, cfg, 1000 + uid, tier)
+        np.testing.assert_array_equal(
+            np.asarray(done[uid].result), x_ref,
+            err_msg=f"uid={uid} tier={tier} kw={kw}")
+        assert done[uid].nfe == nfe_ref, (uid, tier, done[uid].nfe, nfe_ref)
+
+
+def test_mixed_wave_nfe_ordering_and_class_stats(server_parts):
+    """Draft requests must come in far cheaper than high-fidelity ones
+    in the same batch (the paper's ε frontier, served), and the per-class
+    accounting at the _d2h seam must agree exactly with the per-request
+    NFE the requests themselves report."""
+    sde, cfg, step = server_parts
+    b, done = _serve_wave(sde, cfg, step, sync_horizon=4)
+    by_tier = {}
+    for uid, tier in enumerate(WAVE):
+        by_tier.setdefault(tier or "default", []).append(done[uid].nfe)
+    mean = {k: sum(v) / len(v) for k, v in by_tier.items()}
+    assert mean["draft"] <= 0.5 * mean["high_fidelity"], mean
+    assert mean["draft"] <= mean["standard"] <= mean["high_fidelity"], mean
+    stats = b.class_stats
+    for name, nfes in by_tier.items():
+        assert stats[name]["delivered"] == len(nfes)
+        assert stats[name]["mean_nfe"] == pytest.approx(
+            sum(nfes) / len(nfes))
+
+
+def test_tiered_default_class_bitwise_matches_untiered_server(
+        server_parts):
+    """Acceptance criterion: a tiered server fed only tier-less requests
+    is bitwise identical to the pre-tier (untiered) server — on the
+    host-driven and device-resident paths. The per-slot tolerance vector
+    holds the static config's values, and an fp32 broadcast multiply by
+    an equal-valued vector is the same bits as the scalar constant."""
+    sde, cfg, step = server_parts
+
+    def run(tiered, **kw):
+        b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                             slots=4, cfg=cfg,
+                             tolerance_classes=(True if tiered else None),
+                             **kw)
+        for uid in range(8):
+            b.submit(ImageRequest(uid=uid, seed=uid))
+        done = b.run_to_completion()
+        return {u: (done[u].nfe, np.asarray(done[u].result))
+                for u in done}
+
+    for kw in (dict(sync_horizon=4), dict(sync_horizon=4,
+                                          device_resident=True)):
+        base, tier = run(False, **kw), run(True, **kw)
+        assert base.keys() == tier.keys()
+        for u in base:
+            assert base[u][0] == tier[u][0], (u, kw)
+            np.testing.assert_array_equal(base[u][1], tier[u][1],
+                                          err_msg=f"uid={u} kw={kw}")
+
+
+def test_tier_change_does_not_retrace_solve_step(server_parts):
+    """No-retrace discipline (PR-7 / DESIGN.md §14): tolerance classes
+    are carry *data* — serving waves of different tiers reuses the one
+    compiled solve step (and, device-resident, the one driver + event
+    program). A retrace per tier would recompile the score network."""
+    sde, cfg, step = server_parts
+
+    def drain(b, tiers, seed0):
+        for uid, tier in enumerate(tiers):
+            b.submit(ImageRequest(uid=seed0 + uid, seed=seed0 + uid,
+                                  tier=tier))
+        b.run_to_completion()
+
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=4, cfg=cfg, tolerance_classes=True,
+                         sync_horizon=4)
+    drain(b, ["draft"] * 4, 0)
+    n_after_first = b.step_fn._cache_size()
+    drain(b, ["high_fidelity"] * 4, 100)
+    drain(b, ["standard", "draft", None, "high_fidelity"], 200)
+    assert b.step_fn._cache_size() == n_after_first == 1
+
+    bd = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                          slots=4, cfg=cfg, tolerance_classes=True,
+                          sync_horizon=4, device_resident=True)
+    drain(bd, ["draft"] * 4, 0)
+    drain(bd, ["high_fidelity", "standard", None, "draft"], 100)
+    assert bd._driver_fn._cache_size() == 1
+    assert bd._event_fn._cache_size() == 1
+
+
+def test_custom_tolerance_class_and_bad_tier_rejected(server_parts):
+    """A server-local registry (custom ToleranceClass dict) resolves its
+    own names and rejects unknown ones; untiered servers refuse tiered
+    requests instead of silently ignoring the class."""
+    sde, cfg, step = server_parts
+    custom = ToleranceClass("bulk", eps_rel=0.3, priority=2)
+    b = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                         slots=2, cfg=cfg,
+                         tolerance_classes={"bulk": custom})
+    b.submit(ImageRequest(uid=0, seed=0, tier="bulk"))
+    with pytest.raises(KeyError):
+        b.submit(ImageRequest(uid=1, seed=1, tier="draft"))
+    done = b.run_to_completion()
+    x_ref, nfe_ref = None, None
+    k_prior, k_noise = jax.random.split(jax.random.PRNGKey(0))
+    x0 = sde.prior_sample(k_prior, (D,))[None]
+    res = adaptive(sde, _score_fn(sde), x0, k_noise[None], config=cfg,
+                   denoise=False,
+                   atol=float(sde.abs_tolerance), rtol=0.3)
+    np.testing.assert_array_equal(np.asarray(done[0].result),
+                                  np.asarray(res.x[0]))
+    assert done[0].nfe == int(np.asarray(res.nfe)[0])
+
+    b_plain = DiffusionBatcher(sde, step, params=None, sample_shape=(D,),
+                               slots=2, cfg=cfg)
+    with pytest.raises(ValueError):
+        b_plain.submit(ImageRequest(uid=0, seed=0, tier="draft"))
