@@ -27,8 +27,10 @@ import math
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
+from repro.observability.quality import dynamics_consistency
 from repro.core import VPSDE, sample
 from repro.core.analytic import (
     class_gaussian_noise_pred, gaussian_marginal_moments, gaussian_score,
@@ -102,12 +104,20 @@ def bench_planner_occupancy(slots: int = 8, steps: int = 2) -> None:
                          n_steps=steps, returns_label=RETURNS_BINS - 1)
         us = (time.perf_counter() - t0) * 1e6
         n_plans = n_envs * steps
+        # quality-proxy gauge (DESIGN.md §15): RMS env-step residual of
+        # the delivered plans — how far each plan's next-state rows sit
+        # from the OU mean transition; solver regressions push it up
+        plans = np.stack([np.asarray(r.result)
+                          for r in out["finished"].values()])
+        dyn = dynamics_consistency(env, plans, obs_dim=env.obs_dim,
+                                   act_dim=env.act_dim)
         emit(
             f"planning/loop_occ{n_envs / slots:.2f}", us / n_plans,
             f"plans={n_plans};mean_nfe={float(out['nfe'].mean()):.0f};"
             f"mean_reward={float(out['rewards'].mean()):.3f};"
             f"wasted_nfe={out['wasted_nfe_fraction']:.3f};"
-            f"passenger_nfe={out['passenger_nfe_fraction']:.3f}",
+            f"passenger_nfe={out['passenger_nfe_fraction']:.3f};"
+            f"dyn_consistency={dyn:.3f}",
         )
 
 

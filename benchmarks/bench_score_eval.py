@@ -49,8 +49,10 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.hlo import summarize_cost
+from repro.observability.quality import proxy_fid
 from repro.analysis.roofline import score_eval_markdown
 from repro.configs.diffusion import CIFAR_DIT
 from repro.core.precision import resolve_policy
@@ -163,6 +165,13 @@ def main() -> None:
             scale = float(jnp.max(jnp.abs(a)))
             diff = float(jnp.max(jnp.abs(a - b)))
             ok = diff <= PARITY_RTOL[preset] * max(scale, 1e-3)
+            # quality-proxy gauge (DESIGN.md §15): distributional drift
+            # between the two variants' outputs under the fixed
+            # random-projection extractor — a max|Δ| parity can stay
+            # inside rtol while the output *distribution* shifts; this
+            # catches that failure mode. dim=8 keeps the fitted moments
+            # sane at these small bench batches.
+            pfid = proxy_fid(np.asarray(a), np.asarray(b), dim=8, seed=0)
 
             common = {
                 "workload": wname, "preset": preset, "batch": batch,
@@ -173,13 +182,14 @@ def main() -> None:
                          "us_per_call": us_b})
             fast_row = {**common, "variant": "fast", "us_per_call": us_f,
                         "parity_max_abs": diff, "parity_scale": scale,
-                        "parity_pass": bool(ok)}
+                        "parity_pass": bool(ok), "proxy_fid": pfid}
             if not on_cpu:
                 fast_row["speedup"] = us_b / us_f
             rows.append(fast_row)
 
             derived = (f"gflops_nfe={flops / 1e9:.2f}"
-                       f"|parity={diff:.2e}|pass={ok}")
+                       f"|parity={diff:.2e}|pass={ok}"
+                       f"|proxy_fid={pfid:.2e}")
             if not on_cpu:
                 derived += f"|speedup={us_b / us_f:.2f}x"
             emit(f"score_eval_{wname}_{preset}_baseline", us_b,

@@ -25,10 +25,12 @@ import argparse
 import math
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.diffusion import TOLERANCE_CLASSES
+from repro.observability.quality import proxy_fid
 from repro.core import AdaptiveConfig, VPSDE
 from repro.core.analytic import (
     gaussian_marginal_moments, gaussian_noise_pred, gaussian_w2,
@@ -115,6 +117,15 @@ def main(argv=()) -> None:
         xs = np.stack([np.asarray(r.result) for r in rs])
         w2[tier] = gaussian_w2(float(xs.mean()), float(xs.std()),
                                mu_a, s_a)
+        # quality-proxy gauge (DESIGN.md §15): per-class proxy-FID
+        # against reference draws from the analytic t_eps marginal —
+        # unlike the pooled-moment W2 it sees the full feature
+        # covariance, so a class whose samples collapse or skew while
+        # keeping the right pooled mean/std still moves this number
+        ref = mu_a + s_a * np.asarray(jax.random.normal(
+            jax.random.PRNGKey(777 + TIERS.index(tier)),
+            (args.per_class, DIM)))
+        pfid = proxy_fid(ref, xs, dim=8, seed=0)
         stats = b.class_stats[tier]
         gate = W2_GATE_SCALE * TOLERANCE_CLASSES[tier].eps_rel + mc_floor
         emit(
@@ -122,6 +133,7 @@ def main(argv=()) -> None:
             dt / len(done) * 1e6,
             f"mean_nfe={mean_nfe[tier]:.1f};w2={w2[tier]:.4f};"
             f"w2_gate={gate:.4f};compliant={int(w2[tier] <= gate)};"
+            f"proxy_fid={pfid:.4f};"
             f"deadline_misses={stats['deadline_misses']};"
             f"delivered={stats['delivered']};"
             f"mean_wait_s={stats['mean_wait_s']:.3f}",

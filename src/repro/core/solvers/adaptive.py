@@ -63,6 +63,9 @@ from repro.core.tolerance import (
     scaled_error_l2,
     scaled_error_linf,
 )
+from repro.observability.telemetry import (
+    StepTelemetry, init_telemetry, record_step,
+)
 from .base import SolveResult, register_solver
 
 Array = jax.Array
@@ -109,6 +112,14 @@ class AdaptiveConfig:
     #: step sizes (unlike the batch-global RK45 baseline). False (the
     #: default) is bit-identical to the SDE solver.
     probability_flow: bool = False
+    #: step-telemetry ring capacity (DESIGN.md §15): > 0 makes
+    #: ``init_carry`` attach a ``StepTelemetry`` ring of that many
+    #: records per slot, and the loop body then writes each iteration's
+    #: (t, h, err, accept) snapshot into it device-side. 0 (the
+    #: default) keeps the carry's pre-telemetry treedef — the
+    #: telemetry-off program is bitwise identical to the untelemetered
+    #: solver on every path.
+    telemetry_capacity: int = 0
 
 
 def _expand(v: Array, x: Array) -> Array:
@@ -237,6 +248,17 @@ class SolverCarry:
          changes are data, never a retrace. Both-or-neither: None (the
          default) is the static-config path, bitwise identical to the
          pre-tolerance-class solver.
+      telemetry: optional ``StepTelemetry`` ring (DESIGN.md §15): (B,
+         cap) buffers of each iteration's per-slot (t, h, err, accept)
+         snapshot plus a monotone head cursor, written by the loop body
+         at ``head % cap`` each iteration. Like ``cond``/``atol``, its
+         None-ness is treedef structure — the None default keeps the
+         exact pre-telemetry pytree and the telemetry-off trace is
+         bitwise identical; recording never feeds back into the solve.
+         The serving loop permutes its (B, cap) rows with their samples
+         under compaction; the head survives admission resets (unlike
+         the fold-and-reset ``iterations``), so it counts all-time
+         body iterations.
     """
 
     x: Array
@@ -252,6 +274,7 @@ class SolverCarry:
     cond: Any = None
     atol: Any = None
     rtol: Any = None
+    telemetry: Any = None
 
     @property
     def batch(self) -> int:
@@ -273,6 +296,7 @@ def init_carry(
     atol=None,
     rtol=None,
     h0=None,
+    telemetry=None,
     **overrides,
 ) -> SolverCarry:
     """Fresh carry at t = T. ``key`` may be (2,) shared or (B, 2) per-slot.
@@ -289,11 +313,15 @@ def init_carry(
     both or neither. ``h0`` likewise overrides the initial step size
     per-slot (scalar or (B,)); it is clamped to the t-span like
     ``cfg.h_init``.
+
+    ``telemetry`` overrides ``cfg.telemetry_capacity`` (a records-per-
+    slot capacity; DESIGN.md §15): any positive value attaches a fresh
+    ``StepTelemetry`` ring, 0 forces it off, None defers to the config.
     """
     cfg = resolve_config(config, overrides)
     policy = resolve_policy(cfg.precision)
     x_init = x_init.astype(policy.state)
-    c_arr, c_vec = _constraints(sharding)
+    c_arr, c_vec, c_tel = _constraints(sharding)
     batch = x_init.shape[0]
     if (atol is None) != (rtol is None):
         raise ValueError("per-slot tolerances come in pairs: pass both "
@@ -322,6 +350,14 @@ def init_carry(
     ))
     zeros = c_vec(jnp.zeros((batch,), jnp.int32))
     x_init = c_arr(x_init)
+    cap = int(cfg.telemetry_capacity if telemetry is None else telemetry)
+    tel = None
+    if cap > 0:
+        tel = init_telemetry(batch, cap)
+        tel = StepTelemetry(
+            t=c_tel(tel.t), h=c_tel(tel.h), err=c_tel(tel.err),
+            accept=c_tel(tel.accept), head=tel.head,
+        )
     return SolverCarry(
         x=x_init,
         x_prev=x_init,
@@ -336,6 +372,7 @@ def init_carry(
         cond=cond,
         atol=atol,
         rtol=rtol,
+        telemetry=tel,
     )
 
 
@@ -353,16 +390,21 @@ _resolve_config = resolve_config
 
 
 def _constraints(sharding):
-    """(c_arr, c_vec) sharding-constraint closures for (B, ...) / (B,)."""
+    """(c_arr, c_vec, c_tel) sharding-constraint closures for the
+    (B, ...) state, (B,) control vectors, and (B, cap) telemetry
+    buffers."""
     if sharding is None or not len(sharding.spec):
         # a P() spec (fully replicated) has no leading entry — treat as None
-        return (lambda a: a), (lambda v: v)
+        ident = lambda a: a
+        return ident, ident, ident
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     vec_sharding = NamedSharding(sharding.mesh, P(sharding.spec[0]))
+    tel_sharding = NamedSharding(sharding.mesh, P(sharding.spec[0], None))
     c_arr = lambda a: jax.lax.with_sharding_constraint(a, sharding)
     c_vec = lambda v: jax.lax.with_sharding_constraint(v, vec_sharding)
-    return c_arr, c_vec
+    c_tel = lambda m: jax.lax.with_sharding_constraint(m, tel_sharding)
+    return c_arr, c_vec, c_tel
 
 
 def _draw_noise(key: Array, x: Array):
@@ -388,7 +430,8 @@ def _draw_noise(key: Array, x: Array):
     return pairs[:, 0], z.astype(x.dtype)
 
 
-def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
+def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec,
+               c_tel=lambda a: a):
     """One Algorithm-1 iteration: SolverCarry → SolverCarry.
 
     ``score_fn`` arrives *raw*: the body composes the conditioner's
@@ -513,6 +556,17 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
         )
         h_new = c_vec(jnp.where(active, h_new, h))
 
+        # step telemetry (DESIGN.md §15): record this iteration's
+        # attempted step — entry t, the active-clamped h, the fp32
+        # scaled error, and the accept bit — into the ring. The None
+        # check is treedef structure (trace time), so the telemetry-off
+        # body is the exact pre-§15 program; the write consumes values
+        # already computed and feeds nothing back.
+        tel = s.telemetry
+        if tel is not None:
+            tel = record_step(tel, t=t, h=h_c, err=err, accept=accept,
+                              constrain=c_tel)
+
         two = jnp.where(active, 2, 0).astype(jnp.int32)
         return SolverCarry(
             x=x_new,
@@ -530,6 +584,7 @@ def _make_body(sde, score_fn, cfg, eps_abs, step_math, c_arr, c_vec):
             cond=s.cond,
             atol=s.atol,
             rtol=s.rtol,
+            telemetry=tel,
         )
 
     return body
@@ -576,9 +631,10 @@ def solve_chunk(
     """
     cfg = resolve_config(config, overrides)
     eps_abs = float(sde.abs_tolerance if cfg.eps_abs is None else cfg.eps_abs)
-    c_arr, c_vec = _constraints(sharding)
+    c_arr, c_vec, c_tel = _constraints(sharding)
     body = _make_body(
-        sde, score_fn, cfg, eps_abs, _pick_step_math(cfg, sharding), c_arr, c_vec
+        sde, score_fn, cfg, eps_abs, _pick_step_math(cfg, sharding),
+        c_arr, c_vec, c_tel,
     )
     start = carry.iterations
 

@@ -92,7 +92,10 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
                     cfg_scale: float | None = None,
                     device_resident: bool = False,
                     tier: str | None = None,
-                    deadline_ms: float | None = None) -> dict:
+                    deadline_ms: float | None = None,
+                    telemetry: int = 0,
+                    metrics_out: str | None = None,
+                    trace_out: str | None = None) -> dict:
     """Continuous-batching diffusion serving on the ambient device set.
 
     Builds a data-parallel mesh over every available device, shards the
@@ -122,12 +125,21 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     server then runs EDF-within-priority-band admission and the record
     carries per-class NFE + deadline stats. ``deadline_ms`` sets each
     request's latency budget; late deliveries count as misses.
+
+    Observability (DESIGN.md §15): ``telemetry=N`` attaches an N-deep
+    per-slot step-telemetry ring to the carry (0 = off, bit-identical
+    serve loop); ``metrics_out`` writes the metrics registry as JSON
+    plus a sibling ``.prom`` Prometheus text file after the drain;
+    ``trace_out`` turns on the stage tracer and writes the full
+    ``trace_record()`` (requests, metrics, spans, step history) as JSON
+    — the input of ``repro.analysis.telemetry``'s markdown report.
     """
     from repro.core import AdaptiveConfig, VPSDE
     from repro.core.guidance import ClassifierFree, Inpaint
     from repro.core.precision import resolve_policy
     from repro.launch.sample import make_sample_step
     from repro.models.dit import DiTConfig, init_dit
+    from repro.observability.tracing import StageTracer
     from repro.serving.diffusion_server import DiffusionBatcher, ImageRequest
     from repro.serving.scheduler import EdfPriorityAdmission
 
@@ -157,13 +169,15 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
     if tiered and tier != "mixed":
         from repro.configs.diffusion import resolve_tier
         resolve_tier(tier)  # fail fast on a bad preset name
+    tracer = StageTracer() if trace_out else None
     b = DiffusionBatcher(sde, step, params, shape,
                          slots=slots, cfg=cfg, mesh=mesh,
                          sync_horizon=sync_horizon, compaction=compaction,
                          device_resident=device_resident,
                          tolerance_classes=tiered or None,
                          admission=(EdfPriorityAdmission(aging_s=5.0)
-                                    if tiered else None))
+                                    if tiered else None),
+                         telemetry=telemetry, tracer=tracer)
     mixed_cycle = ("draft", "standard", "high_fidelity")
 
     def request_tier(uid: int):
@@ -214,7 +228,29 @@ def serve_diffusion(*, slots: int, requests: int, image_size: int = 8,
         "tier": tier,
         "deadline_ms": deadline_ms,
         "class_stats": b.class_stats if tiered else None,
+        "telemetry": telemetry,
+        "metrics_out": metrics_out,
+        "trace_out": trace_out,
     }
+    if metrics_out:
+        import json
+        import pathlib
+
+        reg = b.metrics_snapshot()
+        path = pathlib.Path(metrics_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(reg.to_json(), indent=2) + "\n")
+        # Prometheus text exposition rides next to the JSON, same stem
+        path.with_suffix(".prom").write_text(reg.to_prometheus())
+        print(f"metrics -> {path} (+ {path.with_suffix('.prom').name})")
+    if trace_out:
+        import json
+        import pathlib
+
+        path = pathlib.Path(trace_out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(b.trace_record(), indent=2) + "\n")
+        print(f"trace -> {path}")
     print(f"diffusion serve[{policy.name}, {rec['conditioner']}"
           f"{', device-resident' if device_resident else ''}]: "
           f"{rec['completed']}/{requests} requests in {dt:.1f}s "
@@ -286,6 +322,18 @@ def main() -> None:
                     help="per-request latency budget; late deliveries "
                          "count as deadline misses in the per-class "
                          "stats (diffusion mode, DESIGN.md §14)")
+    ap.add_argument("--telemetry", type=int, default=0,
+                    help="per-slot step-telemetry ring capacity; 0 = off "
+                         "(bit-identical serve loop, DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry as JSON here plus a "
+                         "sibling .prom Prometheus text file "
+                         "(diffusion mode, DESIGN.md §15)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable stage tracing and write the JSON trace "
+                         "record here — feed it to "
+                         "'python -m repro.analysis.telemetry' for the "
+                         "markdown report (diffusion mode, DESIGN.md §15)")
     args = ap.parse_args()
 
     if args.plan:
@@ -306,7 +354,10 @@ def main() -> None:
                         precision=args.precision,
                         inpaint=args.inpaint, cfg_scale=args.cfg_scale,
                         device_resident=args.device_resident,
-                        tier=args.tier, deadline_ms=args.deadline_ms)
+                        tier=args.tier, deadline_ms=args.deadline_ms,
+                        telemetry=args.telemetry,
+                        metrics_out=args.metrics_out,
+                        trace_out=args.trace_out)
         return
     if args.arch is None:
         ap.error("--arch is required unless --diffusion is given")

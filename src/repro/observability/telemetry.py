@@ -1,0 +1,147 @@
+"""On-device solver step telemetry: a fixed-size ring buffer riding
+``SolverCarry.telemetry`` (DESIGN.md §15).
+
+The paper's contribution is a *dynamic* quantity — per-sample step
+sizes, accept/reject decisions, the scaled error norm that drives them —
+but end-of-solve counters (nfe/accepted/rejected) only show the
+integral. The ring records the trajectory: at every Algorithm-1 body
+iteration, one column write captures each slot's (t, h, err, accept)
+snapshot, entirely device-side, with zero extra host syncs — the host
+decodes the buffers whenever it next pulls the carry.
+
+Design rules (DESIGN.md §15):
+
+  * **None-ness is treedef structure.** ``SolverCarry.telemetry`` is
+    None by default, so telemetry-off carries keep the exact pre-§15
+    pytree structure and the loop body's ``is None`` check happens at
+    trace time — telemetry-off programs are bitwise identical to the
+    pre-telemetry stack on both the host-driven and device-resident
+    serving paths.
+  * **The head cursor is monotone.** ``head`` counts every body
+    iteration since the ring was created and is *never* reset — unlike
+    ``SolverCarry.iterations``, which the serve loop folds-and-resets at
+    every host visit. Writes land at column ``head % capacity``, so the
+    ring always holds the most recent ``capacity`` iterations and
+    ``head`` doubles as the all-time iteration count (the reconciliation
+    invariant the observability tests pin against the serve loop's
+    folded counter).
+  * **Rows travel with their sample.** Under slot compaction the (B,
+    cap) buffers permute along axis 0 exactly like x and the per-slot
+    keys, so a row's recent records follow the sample that produced
+    them. Admission does **not** clear a row: records are globally
+    iteration-stamped (one column per body iteration across all slots)
+    and age out by ring wrap, which keeps aggregate statistics — accept
+    counts, step-size-vs-t curves — exact over every occupant a slot
+    ever hosted. Idle-slot records carry ``t <= t_eps`` and are filtered
+    host-side.
+  * **Recording never feeds back.** The ring is written from values the
+    body already computed (entry t, the clamped attempted h, the fp32
+    scaled error, the accept bit); no solver quantity reads it, and the
+    PRNG stream is untouched — which is what makes the telemetry-on
+    solve's *solution* path bit-identical to telemetry-off.
+
+This module imports only jax/numpy so the solver core can depend on it
+without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StepTelemetry:
+    """Per-slot step-telemetry ring (DESIGN.md §15).
+
+    Attributes:
+      t: (B, cap) fp32 — each slot's time at iteration entry.
+      h: (B, cap) fp32 — the attempted step size (0 for frozen slots,
+         matching the body's active-clamp).
+      err: (B, cap) fp32 — the scaled error norm; accept ⇔ err ≤ 1 for
+         active slots.
+      accept: (B, cap) bool — the accept decision.
+      head: scalar int32 — monotone write cursor == total iterations
+         recorded since creation (never reset; see module docstring).
+    """
+
+    t: Array
+    h: Array
+    err: Array
+    accept: Array
+    head: Array
+
+    @property
+    def batch(self) -> int:
+        return self.t.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.t.shape[1]
+
+
+def init_telemetry(batch: int, capacity: int) -> StepTelemetry:
+    """Fresh all-zero ring for ``batch`` slots × ``capacity`` records."""
+    cap = int(capacity)
+    if cap <= 0:
+        raise ValueError(f"telemetry capacity must be positive, got {cap}")
+    shape = (int(batch), cap)
+    return StepTelemetry(
+        t=jnp.zeros(shape, jnp.float32),
+        h=jnp.zeros(shape, jnp.float32),
+        err=jnp.zeros(shape, jnp.float32),
+        accept=jnp.zeros(shape, bool),
+        head=jnp.asarray(0, jnp.int32),
+    )
+
+
+def record_step(tel: StepTelemetry, *, t: Array, h: Array, err: Array,
+                accept: Array, constrain=None) -> StepTelemetry:
+    """One iteration's column write at ``head % capacity`` (trace-safe).
+
+    ``constrain`` optionally re-applies the (B, cap) sharding constraint
+    after the dynamic-slice update so GSPMD keeps the buffers batch-
+    sharded through the while loop (DESIGN.md §3).
+    """
+    idx = jnp.mod(tel.head, tel.capacity)
+    c = constrain if constrain is not None else (lambda a: a)
+
+    def put(buf, v):
+        return c(jax.lax.dynamic_update_index_in_dim(
+            buf, v.astype(buf.dtype), idx, axis=1))
+
+    return StepTelemetry(
+        t=put(tel.t, t),
+        h=put(tel.h, h),
+        err=put(tel.err, err),
+        accept=put(tel.accept, accept),
+        head=tel.head + 1,
+    )
+
+
+def telemetry_history(tel: StepTelemetry) -> dict:
+    """Host-side chronological decode of a (pulled) ring.
+
+    Returns ``{"t", "h", "err", "accept"}`` as (B, n) numpy arrays in
+    iteration order — the last ``n = min(head, capacity)`` records,
+    oldest first — plus ``"iterations"`` (the all-time head count) and
+    ``"records"`` (n). With ``head <= capacity`` nothing has wrapped and
+    the decode is the full, exact iteration history.
+    """
+    head = int(np.asarray(tel.head))
+    cap = int(np.asarray(tel.t).shape[1])
+    n = min(head, cap)
+    cols = np.arange(head - n, head) % cap if n else np.zeros(0, np.int64)
+    out = {
+        name: np.asarray(getattr(tel, name))[:, cols]
+        for name in ("t", "h", "err", "accept")
+    }
+    out["iterations"] = head
+    out["records"] = n
+    return out

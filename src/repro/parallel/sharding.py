@@ -225,7 +225,8 @@ def sample_state_shardings(mesh: Mesh, batch: int, state_ndim: int):
 
 def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
                            *, per_slot_keys: bool = False, cond=None,
-                           tolerances: bool = False):
+                           tolerances: bool = False,
+                           telemetry: bool = False):
     """A ``SolverCarry``-shaped pytree of NamedShardings (DESIGN.md §7).
 
     ``state_ndim`` is the ndim of the (B, ...) state arrays. With
@@ -246,8 +247,15 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
     per-sample control state and live with their slot; False (the
     default) matches a carry with no tolerance leaves (the None pytree
     structure of the static-config path).
+
+    ``telemetry`` (DESIGN.md §15) shards the step-telemetry ring's
+    (B, cap) buffers over the batch axis — a slot's records live on the
+    device that owns the slot, so shard-local compaction extends to
+    telemetry rows unchanged — with the scalar head cursor replicated;
+    False matches a telemetry-free carry (the None default).
     """
     from repro.core.solvers.adaptive import SolverCarry
+    from repro.observability.telemetry import StepTelemetry
 
     arr, vec, rep = sample_state_shardings(mesh, batch, state_ndim)
     key_s = batch_sharding(mesh, batch, 2) if per_slot_keys else rep
@@ -255,16 +263,22 @@ def solver_carry_shardings(mesh: Mesh, batch: int, state_ndim: int,
         lambda l: batch_sharding(mesh, batch, l.ndim), cond,
     ) if cond is not None else None
     tol_s = vec if tolerances else None
+    tel_s = None
+    if telemetry:
+        ring = batch_sharding(mesh, batch, 2)
+        tel_s = StepTelemetry(t=ring, h=ring, err=ring, accept=ring,
+                              head=rep)
     return SolverCarry(
         x=arr, x_prev=arr, t=vec, h=vec, key=key_s,
         nfe=vec, accepted=vec, rejected=vec, done=vec, iterations=rep,
-        cond=cond_s, atol=tol_s, rtol=tol_s,
+        cond=cond_s, atol=tol_s, rtol=tol_s, telemetry=tel_s,
     )
 
 
 def serving_loop_shardings(mesh: Mesh, batch: int, state_ndim: int,
                            *, per_slot_keys: bool = True, cond=None,
-                           tolerances: bool = False):
+                           tolerances: bool = False,
+                           telemetry: bool = False):
     """Donation-safe sharding pair for the device-resident serve loop
     (DESIGN.md §12): ``(carry_shardings, scalar_sharding)``.
 
@@ -279,6 +293,6 @@ def serving_loop_shardings(mesh: Mesh, batch: int, state_ndim: int,
     """
     carry = solver_carry_shardings(
         mesh, batch, state_ndim, per_slot_keys=per_slot_keys, cond=cond,
-        tolerances=tolerances,
+        tolerances=tolerances, telemetry=telemetry,
     )
     return carry, replicated(mesh)

@@ -280,6 +280,7 @@ class RecedingHorizonPlanner:
         sync_horizon: int = 4,
         compaction: bool = True,
         mesh=None,
+        tracer=None,
     ):
         from repro.launch.sample import make_sample_step
 
@@ -314,6 +315,10 @@ class RecedingHorizonPlanner:
             sde, sample_step, params, pcfg.sample_shape,
             slots=slots, cfg=base, mesh=mesh,
             sync_horizon=sync_horizon, compaction=compaction,
+            # one tracer through planner rounds AND the batcher's
+            # admission/solve/delivery stages (DESIGN.md §15), so a
+            # plan/round span brackets the serve spans it caused
+            tracer=tracer,
         )
         self._uid = 0
 
@@ -358,23 +363,27 @@ class RecedingHorizonPlanner:
         rewards = np.zeros((n_steps, n_envs))
         nfes = np.zeros((n_steps, n_envs), np.int64)
         for round_i in range(n_steps):
-            uids = []
-            for i in range(n_envs):
-                uid = seed0 + self._uid
-                self._uid += 1
-                self.batcher.submit(PlanRequest(
-                    uid=uid, seed=uid,
-                    cond=self.request_cond(obs[i], returns_label),
-                ))
-                uids.append(uid)
-            done = self.batcher.run_to_completion()
-            for i, uid in enumerate(uids):
-                req = done[uid]
-                a = np.asarray(first_action(req.result, self.pcfg))
-                step_key, k = jax.random.split(step_key)
-                obs[i], r = self.env.step(obs[i], jnp.asarray(a), k)
-                rewards[round_i, i] = r
-                nfes[round_i, i] = req.nfe
+            with self.batcher.tracer.span(
+                "plan/round", round=round_i, envs=n_envs
+            ) as sp:
+                uids = []
+                for i in range(n_envs):
+                    uid = seed0 + self._uid
+                    self._uid += 1
+                    self.batcher.submit(PlanRequest(
+                        uid=uid, seed=uid,
+                        cond=self.request_cond(obs[i], returns_label),
+                    ))
+                    uids.append(uid)
+                sp["attrs"]["uids"] = list(uids)
+                done = self.batcher.run_to_completion()
+                for i, uid in enumerate(uids):
+                    req = done[uid]
+                    a = np.asarray(first_action(req.result, self.pcfg))
+                    step_key, k = jax.random.split(step_key)
+                    obs[i], r = self.env.step(obs[i], jnp.asarray(a), k)
+                    rewards[round_i, i] = r
+                    nfes[round_i, i] = req.nfe
         b = self.batcher
         return {
             "rewards": rewards,

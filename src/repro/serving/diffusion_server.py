@@ -52,6 +52,7 @@ only watches t and swaps slots.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -66,6 +67,11 @@ from repro.core.precision import resolve_policy
 from repro.core.sde import SDE
 from repro.core.solvers import solver_nfe_per_iteration
 from repro.core.solvers.adaptive import SolverCarry, events_pending
+from repro.observability.metrics import MetricsRegistry
+from repro.observability.telemetry import (
+    StepTelemetry, init_telemetry, telemetry_history,
+)
+from repro.observability.tracing import NULL_TRACER, profiler_annotation
 from repro.serving.scheduler import (
     AdmissionPolicy, FifoAdmission, TierAccounting, tier_name,
 )
@@ -107,6 +113,12 @@ class ImageRequest:
     #: nfe_per_iter·resident_iters − nfe is this request's
     #: frozen-passenger waste
     resident_iters: int = 0
+    #: per-request accept/reject counts (DESIGN.md §15), pulled with the
+    #: NFE at retirement from the same carry bookkeeping — for the
+    #: Algorithm-1 families nfe == nfe_per_iter·(accepted + rejected),
+    #: the identity the telemetry reconciliation test pins
+    accepted: int = 0
+    rejected: int = 0
     #: absolute deadline on the server's clock, stamped at submit()
     deadline_at: Optional[float] = dataclasses.field(default=None, repr=False)
     _admit_iters: int = dataclasses.field(default=0, repr=False)
@@ -192,6 +204,9 @@ class DiffusionBatcher:
         admission: Optional[AdmissionPolicy] = None,
         delivery=None,
         clock: Optional[Callable[[], float]] = None,
+        telemetry: int = 0,
+        tracer=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.sde = sde
         self.cfg = cfg or AdaptiveConfig()
@@ -229,6 +244,32 @@ class DiffusionBatcher:
         #: ``_d2h`` seam (anything with ``on_deliver(req, now)``)
         self.delivery = delivery if delivery is not None else TierAccounting()
         self._clock = clock if clock is not None else time.monotonic
+        #: step-telemetry ring capacity per slot (DESIGN.md §15): > 0
+        #: grows the carry a ``StepTelemetry`` ring so the device loop
+        #: records every iteration's (t, h, err, accept) per slot; 0
+        #: (the default) keeps the exact pre-telemetry carry treedef and
+        #: serve loop, bit for bit
+        self.telemetry_capacity = int(telemetry)
+        #: stage tracer (DESIGN.md §15): spans around the admission /
+        #: solve / delivery stages with request-id attrs; the default
+        #: NULL_TRACER records nothing and reads no clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        #: metrics registry (DESIGN.md §15): every serve-loop counter —
+        #: iterations, useful/resident NFE, host transfers, accept /
+        #: reject totals, the delivery stage's per-tier series — lives
+        #: here; the legacy attribute names below read through to it
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_iters = self.metrics.counter("serve_iterations_total")
+        self._c_useful = self.metrics.counter("serve_nfe_useful_total")
+        self._c_resident = self.metrics.counter("serve_nfe_resident_total")
+        self._c_transfers = self.metrics.counter("serve_host_transfers_total")
+        self._c_accept = self.metrics.counter("serve_accepted_total")
+        self._c_reject = self.metrics.counter("serve_rejected_total")
+        if hasattr(self.delivery, "bind"):
+            # seam unification (DESIGN.md §15): the delivery stage's
+            # per-tier books and the fold-and-reset waste books write
+            # one shared registry, so they can be asserted consistent
+            self.delivery.bind(self.metrics)
         #: the static-config tolerance a tier-less request rides — same
         #: resolution rule as ``solve_chunk`` (sde-calibrated eps_abs
         #: unless the config pins one)
@@ -256,6 +297,7 @@ class DiffusionBatcher:
             self._carry_shardings = solver_carry_shardings(
                 mesh, slots, 1 + len(self.shape), per_slot_keys=True,
                 cond=cond_struct, tolerances=self.tiered,
+                telemetry=self.telemetry_capacity > 0,
             )
             self.step_fn = jax.jit(
                 lambda p, c: sample_step(p, c, max_sync_iters=self.sync_horizon),
@@ -274,20 +316,6 @@ class DiffusionBatcher:
         self.queue: Deque[ImageRequest] = deque()
         self.finished: Dict[int, ImageRequest] = {}
         self._slot_req: List[Optional[ImageRequest]] = [None] * slots
-        #: total device loop iterations executed (each costs nfe_per_iter
-        #: score-net forwards over the full slot batch, busy or not)
-        self.total_iterations = 0
-        #: Σ per-request NFE actually delivered — the useful fraction of
-        #: nfe_per_iter · slots · total_iterations issued evaluations
-        self.useful_nfe = 0
-        #: Σ nfe_per_iter·resident_iters over delivered requests:
-        #: evaluations issued to *occupied* slots (excludes
-        #: never-occupied idle capacity)
-        self.resident_nfe = 0
-        #: device→host reads the serve loop issued (every one goes
-        #: through ``_d2h``); the device-resident path keeps this
-        #: O(delivered requests) instead of O(sync horizons)
-        self.host_transfers = 0
         #: driver calls (device-resident) / step() chunks (host-driven)
         self.horizon_windows = 0
         #: host mirror of the carry's device iteration counter, so the
@@ -313,6 +341,10 @@ class DiffusionBatcher:
                   if self.tiered else None),
             rtol=(jnp.full((B,), self._default_rtol, jnp.float32)
                   if self.tiered else None),
+            # telemetry ring (DESIGN.md §15): capacity 0 keeps the exact
+            # pre-telemetry treedef, so the off path retraces nothing
+            telemetry=(init_telemetry(B, self.telemetry_capacity)
+                       if self.telemetry_capacity > 0 else None),
         )
         self._carry = self._shard_carry(self._carry)
         self._occupied = None
@@ -335,7 +367,7 @@ class DiffusionBatcher:
         pinning the device-resident path to O(events) — sees all of
         them. One call = one logical sync, however many leaves ride in
         the pytree."""
-        self.host_transfers += 1
+        self._c_transfers.inc()
         return jax.device_get(tree)
 
     def _h2d_vec(self, arr):
@@ -436,6 +468,20 @@ class DiffusionBatcher:
                       else upd(carry.atol, admit_atol)),
                 rtol=(None if carry.rtol is None
                       else upd(carry.rtol, admit_rtol)),
+                # telemetry rows travel with their sample, permute-only
+                # (DESIGN.md §15): admission does NOT clear rows —
+                # records are globally iteration-stamped and age out by
+                # ring wrap, keeping the ring's aggregate accept/reject
+                # sums exactly reconcilable with delivered requests
+                telemetry=(None if carry.telemetry is None else
+                           StepTelemetry(
+                               t=jnp.take(carry.telemetry.t, perm, axis=0),
+                               h=jnp.take(carry.telemetry.h, perm, axis=0),
+                               err=jnp.take(carry.telemetry.err, perm, axis=0),
+                               accept=jnp.take(
+                                   carry.telemetry.accept, perm, axis=0),
+                               head=carry.telemetry.head,
+                           )),
             )
 
         if self._carry_shardings is not None:
@@ -447,6 +493,7 @@ class DiffusionBatcher:
                 self.mesh, self.n, 1 + len(self.shape),
                 per_slot_keys=True, cond=cond_struct,
                 tolerances=self.tiered,
+                telemetry=self.telemetry_capacity > 0,
             )
             self._driver_fn = jax.jit(
                 driver, donate_argnums=(1,),
@@ -545,6 +592,34 @@ class DiffusionBatcher:
         )
         self.queue.append(req)
 
+    # -- serve-loop counters (DESIGN.md §15): the books live in the
+    # metrics registry; these legacy names read through to it ----------
+    @property
+    def total_iterations(self) -> int:
+        """Total device loop iterations executed (each costs nfe_per_iter
+        score-net forwards over the full slot batch, busy or not)."""
+        return int(self._c_iters.value)
+
+    @property
+    def useful_nfe(self) -> int:
+        """Σ per-request NFE actually delivered — the useful fraction of
+        nfe_per_iter · slots · total_iterations issued evaluations."""
+        return int(self._c_useful.value)
+
+    @property
+    def resident_nfe(self) -> int:
+        """Σ nfe_per_iter·resident_iters over delivered requests:
+        evaluations issued to *occupied* slots (excludes never-occupied
+        idle capacity)."""
+        return int(self._c_resident.value)
+
+    @property
+    def host_transfers(self) -> int:
+        """Device→host reads the serve loop issued (every one goes
+        through ``_d2h``); the device-resident path keeps this
+        O(delivered requests) instead of O(sync horizons)."""
+        return int(self._c_transfers.value)
+
     @property
     def class_stats(self) -> Dict[str, Any]:
         """Per-tolerance-class delivery counters (DESIGN.md §14) as
@@ -579,25 +654,35 @@ class DiffusionBatcher:
         return 1.0 - min(self.useful_nfe, self.resident_nfe) / self.resident_nfe
 
     # ------------------------------------------------------------------
-    def _retire(self, rows, nfe, conv_idx) -> None:
+    def _retire(self, rows, nfe, acc, rej, conv_idx) -> None:
         """Deliver the already-transferred retired rows: fill in each
         request, move it to ``finished``, free its slot, and charge the
         waste accounting (shared by the host-driven and device-resident
         paths)."""
         now = self._clock()
-        for row, i in zip(rows, conv_idx):
-            req = self._slot_req[i]
-            req.result = row
-            req.nfe = int(nfe[i])
-            req.done = True
-            req.resident_iters = self.total_iterations - req._admit_iters
-            self.finished[req.uid] = req
-            self.useful_nfe += int(nfe[i])
-            self.resident_nfe += self.nfe_per_iter * req.resident_iters
-            self._slot_req[i] = None
-            # delivery stage (DESIGN.md §14): per-class NFE + deadline
-            # accounting rides the rows already pulled through _d2h
-            self.delivery.on_deliver(req, now)
+        with self.tracer.span(
+            "serve/delivery",
+            uids=[self._slot_req[i].uid for i in conv_idx],
+            slots=list(conv_idx),
+            nfe=[int(nfe[i]) for i in conv_idx],
+        ):
+            for row, i in zip(rows, conv_idx):
+                req = self._slot_req[i]
+                req.result = row
+                req.nfe = int(nfe[i])
+                req.accepted = int(acc[i])
+                req.rejected = int(rej[i])
+                req.done = True
+                req.resident_iters = self.total_iterations - req._admit_iters
+                self.finished[req.uid] = req
+                self._c_useful.inc(int(nfe[i]))
+                self._c_resident.inc(self.nfe_per_iter * req.resident_iters)
+                self._c_accept.inc(int(acc[i]))
+                self._c_reject.inc(int(rej[i]))
+                self._slot_req[i] = None
+                # delivery stage (DESIGN.md §14): per-class NFE + deadline
+                # accounting rides the rows already pulled through _d2h
+                self.delivery.on_deliver(req, now)
 
     def _admit_from_queue(self):
         """Seat queued requests in free slots (host bookkeeping only —
@@ -610,13 +695,20 @@ class DiffusionBatcher:
         if not free or not self.queue:
             return [], []
         now = self._clock()
-        reqs = self.admission.select(self.queue, len(free), now)
-        admit_pos = free[: len(reqs)]
-        for i, req in zip(admit_pos, reqs):
-            self._slot_req[i] = req
-            req._admit_iters = self.total_iterations
-            req._seat_t = now
-            self.refills_per_device[self.slot_device(i)] += 1
+        with self.tracer.span(
+            "serve/admission", free=len(free), queued=len(self.queue)
+        ) as sp:
+            reqs = self.admission.select(self.queue, len(free), now)
+            admit_pos = free[: len(reqs)]
+            for i, req in zip(admit_pos, reqs):
+                self._slot_req[i] = req
+                req._admit_iters = self.total_iterations
+                req._seat_t = now
+                self.refills_per_device[self.slot_device(i)] += 1
+            # request-id propagation (DESIGN.md §15): the admission span
+            # names exactly the uids seated and the slots they took
+            sp["attrs"]["uids"] = [r.uid for r in reqs]
+            sp["attrs"]["slots"] = list(admit_pos)
         return admit_pos, reqs
 
     def _compaction_perm(self) -> np.ndarray:
@@ -676,8 +768,10 @@ class DiffusionBatcher:
                     lambda l: l[jnp.asarray(conv_idx)], c.cond
                 )
                 rows_j = self.conditioner.finalize_project(rows_j, cond_rows)
-            rows, nfe = self._d2h((rows_j, c.nfe))
-            self._retire(rows, nfe, conv_idx)
+            rows, nfe, acc, rej = self._d2h(
+                (rows_j, c.nfe, c.accepted, c.rejected)
+            )
+            self._retire(rows, nfe, acc, rej, conv_idx)
 
         # 2. shard-local compaction: each sample's per-slot key moves
         #    with it, so trajectories are unchanged by the permutation.
@@ -754,6 +848,14 @@ class DiffusionBatcher:
             cond=cond_new,
             atol=(update(c.atol, admit_val=tol_a) if self.tiered else None),
             rtol=(update(c.rtol, admit_val=tol_r) if self.tiered else None),
+            # telemetry rows permute with their sample and are never
+            # cleared at admission (DESIGN.md §15) — see event_update
+            telemetry=(None if c.telemetry is None else StepTelemetry(
+                t=update(c.telemetry.t), h=update(c.telemetry.h),
+                err=update(c.telemetry.err),
+                accept=update(c.telemetry.accept),
+                head=c.telemetry.head,
+            )),
         ))
         self._host_iters = 0
 
@@ -772,13 +874,16 @@ class DiffusionBatcher:
         """
         c = self._carry
         if deliver:
-            done, nfe, iters = self._d2h((c.done, c.nfe, c.iterations))
+            done, nfe, acc, rej, iters = self._d2h(
+                (c.done, c.nfe, c.accepted, c.rejected, c.iterations)
+            )
         else:
             iters = self._d2h(c.iterations)
             done = np.zeros(self.n, bool)
+            acc = rej = None
         # fold-and-reset (cf. event_update): the device counter restarts
         # at every host visit, so add it exactly once here
-        self.total_iterations += int(iters)
+        self._c_iters.inc(int(iters))
         self._host_iters = 0
         occupied = [r is not None for r in self._slot_req]
         conv_idx = [i for i in range(self.n) if occupied[i] and bool(done[i])]
@@ -789,7 +894,7 @@ class DiffusionBatcher:
                     lambda l: l[jnp.asarray(conv_idx)], c.cond
                 )
                 rows_j = self.conditioner.finalize_project(rows_j, cond_rows)
-            self._retire(self._d2h(rows_j), nfe, conv_idx)
+            self._retire(self._d2h(rows_j), nfe, acc, rej, conv_idx)
 
         perm = self._compaction_perm()
         permute = not np.array_equal(perm, np.arange(self.n))
@@ -866,11 +971,17 @@ class DiffusionBatcher:
         busy = sum(1 for r in self._slot_req if r is not None)
         if busy == 0:
             return 0
-        self._carry, ev = self._driver_fn(
-            self.params, self._carry, self._occupied
-        )
+        ann = (profiler_annotation("serve/solve", step=self.horizon_windows)
+               if self.tracer.enabled else contextlib.nullcontext())
+        with self.tracer.span(
+            "serve/solve", window=self.horizon_windows, busy=busy
+        ), ann:
+            self._carry, ev = self._driver_fn(
+                self.params, self._carry, self._occupied
+            )
+            ev = bool(self._d2h(ev))
         self.horizon_windows += 1
-        if bool(self._d2h(ev)):
+        if ev:
             self._process_events()
         return busy
 
@@ -885,10 +996,15 @@ class DiffusionBatcher:
         busy = sum(1 for r in self._slot_req if r is not None)
         if busy == 0:
             return 0
-        self._carry = self.step_fn(self.params, self._carry)
+        ann = (profiler_annotation("serve/solve", step=self.horizon_windows)
+               if self.tracer.enabled else contextlib.nullcontext())
+        with self.tracer.span(
+            "serve/solve", window=self.horizon_windows, busy=busy
+        ), ann:
+            self._carry = self.step_fn(self.params, self._carry)
+            cur = int(self._d2h(self._carry.iterations))
         self.horizon_windows += 1
-        cur = int(self._d2h(self._carry.iterations))
-        self.total_iterations += cur - self._host_iters
+        self._c_iters.inc(cur - self._host_iters)
         self._host_iters = cur
         return busy
 
@@ -907,3 +1023,66 @@ class DiffusionBatcher:
         else:
             self._sync()
         return self.finished
+
+    # ------------------------------------------------------------------
+    def metrics_snapshot(self) -> MetricsRegistry:
+        """Refresh the point-in-time serve gauges (queue depth,
+        occupancy, waste fractions, acceptance rate — DESIGN.md §15)
+        and return the registry; the counters are already live."""
+        m = self.metrics
+        m.gauge("serve_queue_depth").set(float(len(self.queue)))
+        m.gauge("serve_slots_occupied").set(
+            float(sum(1 for r in self._slot_req if r is not None))
+        )
+        m.gauge("serve_slots_total").set(float(self.n))
+        m.gauge("serve_wasted_nfe_fraction").set(self.wasted_nfe_fraction)
+        m.gauge("serve_passenger_nfe_fraction").set(
+            self.passenger_nfe_fraction
+        )
+        acc = self._c_accept.value
+        rej = self._c_reject.value
+        m.gauge("serve_acceptance_rate").set(
+            acc / (acc + rej) if (acc + rej) else 0.0
+        )
+        m.gauge("serve_horizon_windows").set(float(self.horizon_windows))
+        return m
+
+    def trace_record(self) -> Dict[str, Any]:
+        """One JSON-ready record of everything this server observed
+        (DESIGN.md §15): delivered requests with their per-request NFE /
+        accept / reject books, the metrics registry, the tracer's spans
+        and per-stage latency histograms, the per-class delivery stats,
+        and — when the telemetry ring is on — the drained chronological
+        step history (``repro.analysis.telemetry`` renders this record
+        as the markdown report)."""
+        self.metrics_snapshot()
+        requests = [
+            {
+                "uid": r.uid,
+                "tier": tier_name(r),
+                "nfe": r.nfe,
+                "accepted": r.accepted,
+                "rejected": r.rejected,
+                "resident_iters": r.resident_iters,
+                "deadline_missed": bool(r.deadline_missed),
+            }
+            for r in sorted(self.finished.values(), key=lambda r: r.uid)
+        ]
+        rec: Dict[str, Any] = {
+            "requests": requests,
+            "metrics": self.metrics.to_json(),
+            "trace": self.tracer.to_json(),
+            "class_stats": self.class_stats,
+        }
+        if self._carry.telemetry is not None:
+            hist = telemetry_history(self._d2h(self._carry.telemetry))
+            rec["telemetry"] = {
+                "t": hist["t"].tolist(),
+                "h": hist["h"].tolist(),
+                "err": hist["err"].tolist(),
+                "accept": hist["accept"].astype(int).tolist(),
+                "iterations": int(hist["iterations"]),
+                "records": int(hist["records"]),
+                "t_eps": float(self.sde.t_eps),
+            }
+        return rec

@@ -151,23 +151,50 @@ class TierAccounting:
     — so tier accounting adds zero transfers. A delivered-late request
     counts as a miss (``deliver_t > deadline_at``); requests without a
     deadline count under ``deadline_met``.
+
+    ``bind(registry)`` feeds the same deliveries into a shared
+    ``MetricsRegistry`` (DESIGN.md §15) as tier-labeled counters —
+    ``serve_delivered_total`` / ``serve_tier_nfe_total`` /
+    ``serve_deadline_misses_total`` / ``serve_deadline_met_total`` plus
+    a ``serve_queue_wait_seconds`` histogram. This is the seam
+    unification: before §15, deadline misses were counted here (at
+    delivery) while NFE-waste was folded at a different host visit, and
+    nothing asserted the two ledgers agreed; bound to one registry,
+    both stages write the same books and the observability tests pin
+    them to the device-side counters.
     """
 
-    def __init__(self):
+    def __init__(self, registry=None):
         self.stats: Dict[str, TierStats] = {}
+        self.registry = registry
+
+    def bind(self, registry) -> None:
+        """Adopt the serve loop's registry unless one was pinned at
+        construction (idempotent; the batcher calls this so a default
+        TierAccounting shares the batcher's books)."""
+        if self.registry is None:
+            self.registry = registry
 
     def on_deliver(self, req, now: float) -> None:
         name = tier_name(req)
         s = self.stats.setdefault(name, TierStats())
         s.delivered += 1
         s.nfe_total += int(req.nfe)
-        s.wait_s_total += max(0.0, req._seat_t - req._submit_t)
+        wait = max(0.0, req._seat_t - req._submit_t)
+        s.wait_s_total += wait
         missed = req.deadline_at is not None and now > req.deadline_at
         req.deadline_missed = missed
         if missed:
             s.deadline_misses += 1
         else:
             s.deadline_met += 1
+        if self.registry is not None:
+            m = self.registry
+            m.counter("serve_delivered_total", tier=name).inc()
+            m.counter("serve_tier_nfe_total", tier=name).inc(int(req.nfe))
+            m.counter("serve_deadline_misses_total", tier=name).inc(missed)
+            m.counter("serve_deadline_met_total", tier=name).inc(not missed)
+            m.histogram("serve_queue_wait_seconds", tier=name).observe(wait)
 
 
 def tier_name(req) -> str:

@@ -1,6 +1,6 @@
 """docs-lint: keep code↔docs citations and doc links resolvable.
 
-Two checks (DESIGN.md §9 introduced the citation discipline this
+Three checks (DESIGN.md §9 introduced the citation discipline this
 enforces; CI runs this as the fast ``docs-lint`` job):
 
   1. every ``DESIGN.md §N`` citation in ``src/``, ``tests/``,
@@ -8,7 +8,10 @@ enforces; CI runs this as the fast ``docs-lint`` job):
      exists as a ``## §N`` header in ``docs/DESIGN.md``;
   2. every relative markdown link in ``README.md`` and
      ``docs/DESIGN.md`` points at a file or directory that exists
-     (anchors and external http(s)/mailto links are skipped).
+     (anchors and external http(s)/mailto links are skipped);
+  3. the inverse of (1): every ``## §N`` section in DESIGN.md is cited
+     at least once from the code dirs — a design section nothing
+     references is either dead doc or missing its code anchors.
 
 Pure stdlib; exits non-zero with a per-finding report.
 
@@ -80,14 +83,31 @@ def check_links() -> list:
     return errors
 
 
+def check_section_coverage() -> list:
+    """Every ``## §N`` section in DESIGN.md is cited ≥ 1× from code."""
+    cited = set()
+    for d in CODE_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            cited |= set(
+                CITATION_RE.findall(path.read_text(encoding="utf-8"))
+            )
+    return [
+        f"docs/DESIGN.md: section '## §{n}' is never cited from "
+        f"{'/'.join(CODE_DIRS)} — dead doc, or code missing its "
+        f"'DESIGN.md §{n}' anchors"
+        for n in sorted(design_sections() - cited, key=int)
+    ]
+
+
 def main() -> int:
-    errors = check_citations() + check_links()
+    errors = check_citations() + check_links() + check_section_coverage()
     for e in errors:
         print(f"docs-lint: {e}", file=sys.stderr)
     if errors:
         print(f"docs-lint: {len(errors)} problem(s)", file=sys.stderr)
         return 1
-    print("docs-lint: all DESIGN.md §-citations and doc links resolve")
+    print("docs-lint: all DESIGN.md §-citations and doc links resolve; "
+          "every section is cited")
     return 0
 
 
